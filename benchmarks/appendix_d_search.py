@@ -1,0 +1,61 @@
+"""Appendix D — lambda sensitivity (Eq. 1) + beam-search comparison."""
+from __future__ import annotations
+
+import statistics
+
+from repro.core import logical_optimizer as lopt
+from repro.data import WORKLOADS
+from benchmarks import common
+
+
+def run(datasets=("movie", "estate")):
+    lam_rows = []
+    beam_rows = []
+    for ds in datasets:
+        table, oracle, backends, perfect = common.env(ds)
+        queries = [q for q in WORKLOADS[ds] if q.size == "L"]
+        for lam in (0.0, 0.2, 0.4, 0.6, 0.8, 1.0):
+            costs = []
+            for q in queries:
+                res = lopt.optimize(
+                    q.plan_for(table), table, backends,
+                    cfg=lopt.LogicalOptConfig(
+                        n_iterations=3, lam=lam, seed=hash(q.qid) % 43))
+                costs.append(res.best_cost / max(res.initial_cost, 1e-12))
+            lam_rows.append({"dataset": ds, "lambda": lam,
+                             "cost_ratio": round(statistics.mean(costs),
+                                                 3)})
+        opt_usd = {"ours": [], "beam": []}
+        exec_usd = {"ours": [], "beam": []}
+        for q in queries:
+            seed = hash(q.qid) % 43
+            a = lopt.optimize(q.plan_for(table), table, backends,
+                              cfg=lopt.LogicalOptConfig(n_iterations=3,
+                                                        seed=seed))
+            b = lopt.optimize_beam(q.plan_for(table), table, backends,
+                                   cfg=lopt.LogicalOptConfig(
+                                       n_iterations=3, seed=seed),
+                                   beam_width=2)
+            opt_usd["ours"].append(a.meter.total.usd)
+            opt_usd["beam"].append(b.meter.total.usd)
+            exec_usd["ours"].append(a.best_cost)
+            exec_usd["beam"].append(b.best_cost)
+        beam_rows.append({
+            "dataset": ds,
+            "opt_usd_ours": round(statistics.mean(opt_usd["ours"]), 4),
+            "opt_usd_beam": round(statistics.mean(opt_usd["beam"]), 4),
+            "exec_usd_ours": round(statistics.mean(exec_usd["ours"]), 4),
+            "exec_usd_beam": round(statistics.mean(exec_usd["beam"]), 4),
+        })
+    common.emit("appendix_d_lambda", lam_rows)
+    common.emit("appendix_d_beam", beam_rows)
+    print(common.fmt_table(lam_rows, ["dataset", "lambda", "cost_ratio"]))
+    print()
+    print(common.fmt_table(beam_rows, ["dataset", "opt_usd_ours",
+                                       "opt_usd_beam", "exec_usd_ours",
+                                       "exec_usd_beam"]))
+    return lam_rows, beam_rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Appendix C (Fig. 14) — batch prompting: cost savings vs quality.
+
+Nirvana with batch sizes 1 / 3 / 4 on Movie and Estate.
+"""
+from __future__ import annotations
+
+from repro.data import WORKLOADS
+from benchmarks import common
+
+
+def run(datasets=("movie", "estate")):
+    rows = []
+    for ds in datasets:
+        table, oracle, backends, perfect = common.env(ds)
+        for bsz in (1, 3, 4):
+            usd = 0.0
+            ok = 0
+            n = 0
+            for q in WORKLOADS[ds]:
+                r = common.run_nirvana(q, table, backends, perfect,
+                                       seed=hash(q.qid) % 61,
+                                       batch_size=bsz)
+                usd += r.usd
+                ok += bool(r.correct)
+                n += 1
+            rows.append({"dataset": ds, "batch": bsz,
+                         "total_usd": round(usd, 4),
+                         "quality": f"{100 * ok / n:.1f}%"})
+        base = next(r for r in rows if r["dataset"] == ds and r["batch"] == 1)
+        for r in rows:
+            if r["dataset"] == ds and r["batch"] > 1:
+                r["usd_saving"] = round(base["total_usd"] - r["total_usd"],
+                                        5)
+    common.emit("fig14_batch_prompting", rows)
+    print(common.fmt_table(rows, ["dataset", "batch", "total_usd",
+                                  "usd_saving", "quality"]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

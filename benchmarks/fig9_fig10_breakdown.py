@@ -1,0 +1,54 @@
+"""Figures 9 & 10 — phase breakdown + per-model-tier breakdown.
+
+Fig. 9: runtime/cost split across logical optimizer / physical optimizer /
+query executor, per dataset (share of optimization in total time).
+Fig. 10: records processed and USD per backend tier per query.
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.data import WORKLOADS
+from benchmarks import common
+
+GAME_ROWS = 2000
+
+
+def run(datasets=("movie", "estate", "game")):
+    fig9_rows = []
+    fig10_rows = []
+    for ds in datasets:
+        table, oracle, backends, perfect = common.env(
+            ds, max_rows=GAME_ROWS if ds == "game" else 0)
+        opt_share = []
+        for q in WORKLOADS[ds]:
+            r = common.run_nirvana(q, table, backends, perfect,
+                                   seed=hash(q.qid) % 53)
+            total = r.wall_s or 1e-9
+            opt_share.append(r.opt_wall_s / total)
+            tiers = r.detail["exec_by_tier"]
+            row = {"dataset": ds, "qid": q.qid}
+            for t in ("m1", "m2", "m3", "m*"):
+                u = tiers.get(t, {})
+                row[f"{t}_calls"] = int(u.get("calls", 0))
+                row[f"{t}_usd"] = round(u.get("usd", 0.0), 4)
+            fig10_rows.append(row)
+        fig9_rows.append({
+            "dataset": ds,
+            "opt_share_of_total": f"{100 * statistics.mean(opt_share):.1f}%",
+            "paper_reference": {"movie": "50.7%", "estate": "6.7%",
+                                "game": "42.7%"}[ds],
+        })
+    common.emit("fig9_breakdown", fig9_rows)
+    common.emit("fig10_model_breakdown", fig10_rows)
+    print(common.fmt_table(fig9_rows, ["dataset", "opt_share_of_total",
+                                       "paper_reference"]))
+    print()
+    print(common.fmt_table(fig10_rows[:12],
+                           ["dataset", "qid", "m1_calls", "m2_calls",
+                            "m3_calls", "m*_calls", "m1_usd", "m*_usd"]))
+    return fig9_rows, fig10_rows
+
+
+if __name__ == "__main__":
+    run()

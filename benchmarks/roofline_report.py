@@ -1,0 +1,66 @@
+"""§Roofline report — aggregates launch/dryrun artifacts into the
+per-(arch x shape x mesh) roofline table (compute/memory/collective terms,
+dominant bottleneck, useful-FLOPs ratio, roofline fraction).
+
+Run the dry-run first:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out artifacts/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                          "dryrun")
+
+
+def load_records(pattern: str = "*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run():
+    recs = load_records()
+    rows = []
+    for r in recs:
+        if r.get("skipped"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": "SKIP (sub-quadratic "
+                         "only)"})
+            continue
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": "FAIL"})
+            continue
+        roof = r.get("roofline", {})
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_s": f"{roof.get('compute_s', 0):.3e}",
+            "memory_s": f"{roof.get('memory_s', 0):.3e}",
+            "collective_s": f"{roof.get('collective_s', 0):.3e}",
+            "dominant": roof.get("dominant", "-"),
+            "useful_flops": f"{roof.get('useful_flops_ratio', 0):.2f}",
+            "roofline_frac": f"{roof.get('roofline_fraction', 0):.3f}",
+            "bytes_per_dev_gb": f"{r.get('bytes_per_device', 0) / 2**30:.1f}",
+        })
+    if rows:
+        common.emit("roofline_report", rows)
+        print(common.fmt_table(
+            rows, ["arch", "shape", "mesh", "status", "compute_s",
+                   "memory_s", "collective_s", "dominant", "useful_flops",
+                   "roofline_frac", "bytes_per_dev_gb"]))
+    else:
+        print("no dry-run artifacts found; run repro.launch.dryrun first")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Table 4 — end-to-end runtime + monetary cost across systems.
+
+Mean per-query wall-clock (simulated latency model, 16-way concurrency) and
+USD for Table-LLaVA / TableRAG / Palimpzest / Lotus strategy-analogs vs
+Nirvana, per dataset x workload size.
+"""
+from __future__ import annotations
+
+import statistics
+
+from repro.data import WORKLOADS
+from benchmarks import common
+
+GAME_ROWS = 3000   # game scaled for bench runtime; per-record costs scale
+                   # linearly so Δ% columns are row-count invariant
+
+
+def run(datasets=("movie", "estate", "game")):
+    rows = []
+    for ds in datasets:
+        table, oracle, backends, perfect = common.env(
+            ds, max_rows=GAME_ROWS if ds == "game" else 0)
+        per_size = {}
+        for q in WORKLOADS[ds]:
+            runs = {
+                "table-llava": common.run_table_llava(q, table, backends,
+                                                      perfect),
+                "tablerag": common.run_tablerag_analog(q, table, backends,
+                                                       perfect),
+                "palimpzest": common.run_palimpzest_analog(q, table,
+                                                           backends,
+                                                           perfect),
+                "lotus": common.run_lotus_analog(q, table, backends,
+                                                 perfect),
+                "nirvana": common.run_nirvana(q, table, backends, perfect,
+                                              seed=hash(q.qid) % 97),
+            }
+            per_size.setdefault(q.size, []).append(runs)
+        for size, entries in per_size.items():
+            row = {"dataset": ds, "workload": size}
+            for sysname in ("table-llava", "tablerag", "palimpzest",
+                            "lotus", "nirvana"):
+                ws = [e[sysname].wall_s for e in entries]
+                us = [e[sysname].usd for e in entries]
+                row[f"{sysname}_time_s"] = round(statistics.mean(ws), 3)
+                row[f"{sysname}_usd"] = round(statistics.mean(us), 4)
+            best_other = min(row["palimpzest_time_s"], row["lotus_time_s"])
+            best_cost = min(row["palimpzest_usd"], row["lotus_usd"])
+            row["d_time_pct"] = round(
+                100 * (1 - row["nirvana_time_s"] / best_other), 1) \
+                if best_other else 0.0
+            row["d_cost_pct"] = round(
+                100 * (1 - row["nirvana_usd"] / best_cost), 1) \
+                if best_cost else 0.0
+            rows.append(row)
+    common.emit("table4_runtime_cost", rows)
+    print(common.fmt_table(rows, ["dataset", "workload",
+                                  "tablerag_time_s", "palimpzest_time_s",
+                                  "lotus_time_s", "nirvana_time_s",
+                                  "palimpzest_usd", "lotus_usd",
+                                  "nirvana_usd", "d_time_pct",
+                                  "d_cost_pct"]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Table 5 — answer quality across systems + Nirvana ablations.
+
+Fraction of queries answered correctly (graded against the oracle ground
+truth: numerics within 5%, tables by row-set F1 > 0.9, text by semantic
+equality).
+"""
+from __future__ import annotations
+
+from repro.data import WORKLOADS
+from benchmarks import common
+
+GAME_ROWS = 2000
+
+
+def run(datasets=("movie", "estate", "game")):
+    rows = []
+    for ds in datasets:
+        table, oracle, backends, perfect = common.env(
+            ds, max_rows=GAME_ROWS if ds == "game" else 0)
+        counts = {}
+        for q in WORKLOADS[ds]:
+            seed = hash((ds, q.qid)) % 997
+            entries = {
+                "gpt-direct": common.run_gpt_direct(q, table, backends,
+                                                    perfect),
+                "table-llava": common.run_table_llava(q, table, backends,
+                                                      perfect),
+                "tablerag": common.run_tablerag_analog(q, table, backends,
+                                                       perfect),
+                "palimpzest": common.run_palimpzest_analog(
+                    q, table, backends, perfect),
+                "lotus": common.run_lotus_analog(q, table, backends,
+                                                 perfect),
+                "nirvana": common.run_nirvana(q, table, backends, perfect,
+                                              seed=seed),
+                "nirvana-no-logical": common.run_nirvana(
+                    q, table, backends, perfect, logical=False, seed=seed),
+                "nirvana-no-physical": common.run_nirvana(
+                    q, table, backends, perfect, physical=False, seed=seed),
+                "nirvana-no-opt": common.run_nirvana(
+                    q, table, backends, perfect, logical=False,
+                    physical=False, seed=seed),
+            }
+            for name, r in entries.items():
+                c = counts.setdefault(name, [0, 0])
+                c[1] += 1
+                c[0] += bool(r.correct)
+        row = {"dataset": ds}
+        for name, (ok, n) in counts.items():
+            row[name] = f"{100 * ok / n:.1f}%"
+        rows.append(row)
+    common.emit("table5_quality", rows)
+    print(common.fmt_table(rows, ["dataset", "gpt-direct", "table-llava",
+                                  "tablerag", "palimpzest", "lotus",
+                                  "nirvana", "nirvana-no-logical",
+                                  "nirvana-no-physical", "nirvana-no-opt"]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

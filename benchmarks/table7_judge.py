@@ -1,0 +1,63 @@
+"""Table 7 — LLM-as-a-judge reliability + verification cost.
+
+Run the logical optimizer with an error-injecting rewriter over every
+query; score the judge's accept/reject against the rewrites' known
+correctness: success rate, precision, recall, cost per query.
+"""
+from __future__ import annotations
+
+from repro.core import logical_optimizer as lopt
+from repro.core import rewriter as rw
+from repro.data import WORKLOADS
+from benchmarks import common
+
+GAME_ROWS = 2000
+
+
+def run(datasets=("movie", "estate", "game"), error_rate: float = 0.3):
+    rows = []
+    for ds in datasets:
+        table, oracle, backends, perfect = common.env(
+            ds, max_rows=GAME_ROWS if ds == "game" else 0)
+        tp = fp = fn = tn = 0
+        usd = 0.0
+        n_queries = 0
+        for q in WORKLOADS[ds]:
+            rewriter = rw.LLMSimRewriter(error_rate=error_rate)
+            res = lopt.optimize(
+                q.plan_for(table), table, backends, rewriter=rewriter,
+                cfg=lopt.LogicalOptConfig(n_iterations=4,
+                                          seed=hash(q.qid) % 31))
+            n_queries += 1
+            usd += sum(u.usd for t, u in res.meter.by_tier.items()
+                       if t == "m*")     # the judge-rating calls
+            for c in res.candidates[1:]:
+                if c.rewrite_correct is None:
+                    continue
+                if c.rewrite_correct and c.acc >= 0.8:
+                    tp += 1
+                elif not c.rewrite_correct and c.acc >= 0.8:
+                    fp += 1
+                elif c.rewrite_correct and c.acc < 0.8:
+                    fn += 1
+                else:
+                    tn += 1
+        total = tp + fp + fn + tn
+        rows.append({
+            "dataset": ds, "rewrites": total,
+            "success_rate": f"{100 * (tp + tn) / max(1, total):.1f}%",
+            "precision": f"{100 * tp / max(1, tp + fp):.1f}%",
+            "recall": f"{100 * tp / max(1, tp + fn):.1f}%",
+            "judge_usd_per_query": round(usd / max(1, n_queries), 4),
+            "paper_success": {"movie": "81.6%", "estate": "90.0%",
+                              "game": "86.7%"}[ds],
+        })
+    common.emit("table7_judge", rows)
+    print(common.fmt_table(rows, ["dataset", "rewrites", "success_rate",
+                                  "precision", "recall",
+                                  "judge_usd_per_query", "paper_success"]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

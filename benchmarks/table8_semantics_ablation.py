@@ -1,0 +1,89 @@
+"""Table 8 — optimizer w/ vs w/o semantic transformations vs 2-step.
+
+w/ sem    all four rules (incl. non-LLM replacement)
+w/o sem   basic rules only (pushdown / reorder / fusion)
+2-step    basic rules first, then the semantic rule greedily
+"""
+from __future__ import annotations
+
+import random
+import statistics
+
+from repro.core import executor as ex
+from repro.core import logical_optimizer as lopt
+from repro.core import rewriter as rw
+from repro.core import rules as rules_mod
+from repro.data import WORKLOADS
+from benchmarks import common
+
+
+def _two_step(q, table, backends, perfect, seed):
+    """Basic random-walk phase, then greedy semantic replacement."""
+    plan = q.plan_for(table)
+    res = lopt.optimize(
+        plan, table, backends,
+        rewriter=rw.LLMSimRewriter(rule_names=rules_mod.BASIC_RULES),
+        cfg=lopt.LogicalOptConfig(n_iterations=3, seed=seed))
+    plan2 = res.best
+    teacher = rw.GreedyRuleRewriter(rule_names=rules_mod.SEMANTIC_RULES,
+                                    n_rows=table.n_rows)
+    rng = random.Random(seed)
+    opt_wall = res.opt_wall_s
+    opt_usd = res.meter.total.usd
+    for _ in range(4):
+        oc = teacher.rewrite(plan2, rng)
+        opt_wall += oc.usage.latency_s
+        opt_usd += oc.usage.usd
+        if oc.plan is None or oc.plan.signature() == plan2.signature():
+            break
+        plan2 = oc.plan
+    run = ex.execute(plan2, table, backends, default_tier="m*")
+    return opt_wall, opt_usd, run.wall_s, run.meter.total.usd
+
+
+def run(datasets=("movie", "estate")):
+    rows = []
+    for ds in datasets:
+        table, oracle, backends, perfect = common.env(ds)
+        for size in ("S", "M", "L"):
+            acc = {"w_sem": [], "wo_sem": [], "two_step": []}
+            for q in [x for x in WORKLOADS[ds] if x.size == size]:
+                seed = hash((ds, q.qid)) % 89
+                w = common.run_nirvana(q, table, backends, perfect,
+                                       physical=False, seed=seed)
+                acc["w_sem"].append((w.opt_wall_s, w.opt_usd,
+                                     w.exec_wall_s, w.exec_usd))
+                wo = common.run_nirvana(q, table, backends, perfect,
+                                        physical=False,
+                                        rules=rules_mod.BASIC_RULES,
+                                        seed=seed)
+                acc["wo_sem"].append((wo.opt_wall_s, wo.opt_usd,
+                                      wo.exec_wall_s, wo.exec_usd))
+                acc["two_step"].append(_two_step(q, table, backends,
+                                                 perfect, seed))
+            row = {"dataset": ds, "size": size}
+            for name, vals in acc.items():
+                row[f"opt_time_{name}"] = round(
+                    statistics.mean(v[0] for v in vals), 2)
+                row[f"overall_time_{name}"] = round(
+                    statistics.mean(v[0] + v[2] for v in vals), 2)
+                row[f"opt_cost_{name}"] = round(
+                    statistics.mean(v[1] for v in vals), 4)
+                row[f"overall_cost_{name}"] = round(
+                    statistics.mean(v[1] + v[3] for v in vals), 4)
+            rows.append(row)
+    common.emit("table8_semantics_ablation", rows)
+    print(common.fmt_table(rows, ["dataset", "size",
+                                  "opt_time_w_sem", "opt_time_wo_sem",
+                                  "opt_time_two_step",
+                                  "overall_time_w_sem",
+                                  "overall_time_wo_sem",
+                                  "overall_time_two_step",
+                                  "overall_cost_w_sem",
+                                  "overall_cost_wo_sem",
+                                  "overall_cost_two_step"]))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Quickstart — the paper's Listing-1 experience.
+
+Build a semantic query over the multi-modal Movie table with the
+programmable operators, then let Nirvana optimize it:
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import SemanticDataFrame, make_backends
+from repro.data import load_dataset
+
+
+def main():
+    table, oracle = load_dataset("movie")
+    backends = make_backends(oracle)
+
+    df = SemanticDataFrame(table)
+    df = (df.semantic_map(
+              "According to the movie plot, extract the genre(s) of each "
+              "movie.", input_column="Plot", output_column="Genre")
+            .semantic_filter("The rating is higher than 8.5.",
+                             input_column="IMDB_rating")
+            .semantic_filter("The rating is lower than 9.",
+                             input_column="IMDB_rating")
+            .semantic_filter("The movie belongs to crime movies.",
+                             input_column="Genre")
+            .semantic_reduce("Summarize the common characteristics of "
+                             "these crime movies.", input_column="Plot"))
+
+    print("=== initial logical plan ===")
+    print(df.plan().describe())
+
+    report = df.execute(backends)
+
+    print("\n=== optimized physical plan ===")
+    print(report.plan.describe())
+    print("\n=== result ===")
+    print(repr(report.result)[:200])
+    print("\n=== cost breakdown (simulated latency / USD) ===")
+    for phase, d in report.phase_breakdown().items():
+        print(f"  {phase:14s} wall={d['wall_s']:8.2f}s  usd=${d['usd']:.4f}")
+    print(f"  {'TOTAL':14s} wall={report.total_wall_s:8.2f}s  "
+          f"usd=${report.total_usd:.4f}")
+
+    base = df.execute(backends, logical=False, physical=False)
+    print(f"\nunoptimized: wall={base.total_wall_s:8.2f}s  "
+          f"usd=${base.total_usd:.4f}")
+    print(f"savings: {100 * (1 - report.total_wall_s / base.total_wall_s):.0f}%"
+          f" time, {100 * (1 - report.total_usd / base.total_usd):.0f}% cost")
+
+
+if __name__ == "__main__":
+    main()

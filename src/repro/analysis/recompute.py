@@ -1,0 +1,56 @@
+"""Recompute roofline terms for saved dry-run artifacts from their .hlo
+files (used whenever the analysis layer improves — the lower/compile work
+is not repeated).
+
+    PYTHONPATH=src python -m repro.analysis.recompute [dir...]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.analysis import roofline as rl
+from repro.configs import SHAPES, get_config
+
+
+def recompute_dir(d: str) -> int:
+    n = 0
+    for jp in sorted(glob.glob(os.path.join(d, "*.json"))):
+        rec = json.load(open(jp))
+        if rec.get("skipped") or not rec.get("ok"):
+            continue
+        hp = jp.replace(".json", ".hlo")
+        if not os.path.exists(hp):
+            continue
+        hstats = rl.parse_hlo(open(hp).read())
+        cost = rec.get("cost_analysis", {})
+        mf = rl.model_flops_estimate(get_config(rec["arch"]),
+                                     SHAPES[rec["shape"]])
+        roof = rl.compute_roofline(cost, hstats.collectives, rec["chips"],
+                                   mf, flops_override=hstats.dot_flops)
+        rec["dot_flops_per_device"] = hstats.dot_flops
+        rec["collectives"] = {
+            "bytes_per_chip": hstats.collectives.bytes_per_chip,
+            "bytes_per_chip_raw": hstats.collectives.bytes_per_chip_raw,
+            "counts": hstats.collectives.counts,
+            "bytes_by_kind": hstats.collectives.bytes_by_kind,
+        }
+        rec["roofline"] = {
+            "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s, "dominant": roof.dominant,
+            "model_flops": mf, "flops_per_device": roof.flops_per_device,
+            "useful_flops_ratio": roof.useful_flops_ratio,
+            "roofline_fraction": roof.roofline_fraction,
+            "step_time_s": roof.step_time_s,
+        }
+        json.dump(rec, open(jp, "w"), indent=1)
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    dirs = sys.argv[1:] or ["artifacts/dryrun", "artifacts/perf"]
+    for d in dirs:
+        print(f"{d}: recomputed {recompute_dir(d)} records")

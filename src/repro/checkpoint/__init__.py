@@ -1,0 +1,4 @@
+"""Atomic sharded checkpointing (sync + async) with mesh-agnostic restore."""
+from repro.checkpoint.checkpoint import (save, restore, latest_step,  # noqa: F401
+                                         committed_steps,
+                                         AsyncCheckpointer)

@@ -1,0 +1,204 @@
+"""Sharded, atomic, mesh-agnostic checkpointing.
+
+Layout (one directory per step):
+
+    ckpt_dir/
+      step_000120.tmp-<nonce>/   # written first
+        manifest.json            # leaf paths, shapes, dtypes, logical axes
+        <leaf>.npy               # one file per leaf (per host-shard at scale)
+      step_000120/               # atomic rename == commit marker
+
+Properties that matter at 1000+ nodes:
+  * atomicity: a crash mid-write leaves only a .tmp dir, never a
+    half-readable step; ``latest_step`` skips uncommitted dirs
+  * mesh-agnostic restore: leaves are stored as *logical* arrays + axis
+    names; ``restore`` re-materializes them under any mesh whose sharding
+    rules divide the dims (elastic re-meshing = save on 512 chips, restore
+    on 256)
+  * async save: serialization runs on a writer thread; training only blocks
+    if it laps an in-flight save (double-buffering semantics)
+  * keep-last-k garbage collection
+  * integrity: per-leaf SHA-256 in the manifest, verified on restore
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import queue
+import shutil
+import threading
+import uuid
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.models import common as cm
+
+
+def _flatten(tree) -> Dict[str, cm.Param]:
+    out = {}
+
+    def rec(node, path):
+        if cm.is_param(node):
+            out["/".join(path)] = node
+            return
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k], path + [str(k)])
+            return
+        out["/".join(path)] = cm.Param(node, None)  # bare leaf
+
+    rec(tree, [])
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for path, val in flat.items():
+        parts = path.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = val
+    return root
+
+
+def _leaf_file(name: str) -> str:
+    return name.replace("/", "__") + ".npy"
+
+
+def save(ckpt_dir: str, step: int, state, *, keep_last: int = 3,
+         extra_meta: Optional[dict] = None) -> str:
+    """Synchronous atomic save. Returns the committed directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(state)
+    tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp-{uuid.uuid4().hex[:8]}")
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(tmp)
+    manifest = {"step": step, "leaves": {}, "meta": extra_meta or {}}
+    for name, p in flat.items():
+        arr = np.asarray(jax.device_get(p.value))
+        fn = _leaf_file(name)
+        with open(os.path.join(tmp, fn), "wb") as f:
+            np.save(f, arr)
+        with open(os.path.join(tmp, fn), "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        manifest["leaves"][name] = {
+            "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "axes": list(p.axes) if p.axes is not None else None,
+            "sha256": digest,
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # commit
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: str, keep_last: int) -> None:
+    steps = committed_steps(ckpt_dir)
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+    # drop orphaned tmp dirs (crashed writers)
+    for d in os.listdir(ckpt_dir):
+        if ".tmp-" in d:
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def committed_steps(ckpt_dir: str):
+    out = []
+    if not os.path.isdir(ckpt_dir):
+        return out
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and ".tmp" not in d and os.path.exists(
+                os.path.join(ckpt_dir, d, "manifest.json")):
+            out.append(int(d.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None, *,
+            mesh=None, rules: Optional[dict] = None,
+            verify: bool = True) -> Tuple[int, Any]:
+    """Load a checkpoint; with (mesh, rules) the leaves are placed with the
+    target NamedShardings (elastic re-meshing path)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = {}
+    for name, info in manifest["leaves"].items():
+        path = os.path.join(d, info["file"])
+        with open(path, "rb") as f:
+            raw = f.read()
+        if verify:
+            digest = hashlib.sha256(raw).hexdigest()
+            if digest != info["sha256"]:
+                raise IOError(f"checksum mismatch for {name} in {d}")
+        arr = np.load(path)
+        axes = tuple(info["axes"]) if info["axes"] is not None else None
+        if mesh is not None and rules is not None and axes is not None:
+            from repro.distributed import sharding as shd
+            sharding = shd.NamedSharding(
+                mesh, shd.spec_for(arr.shape, axes, rules, mesh))
+            val = jax.device_put(arr, sharding)
+        else:
+            val = jax.numpy.asarray(arr)
+        flat[name] = cm.Param(val, axes) if axes is not None else val
+    return step, _unflatten(flat)
+
+
+class AsyncCheckpointer:
+    """Writer-thread checkpointer: ``save`` enqueues a host copy of the
+    state and returns; at most one save is in flight (a second enqueue
+    blocks until the writer drains — double buffering)."""
+
+    def __init__(self, ckpt_dir: str, keep_last: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, state = item
+            try:
+                save(self.ckpt_dir, step, state, keep_last=self.keep_last)
+            except BaseException as e:   # surfaced on next call / close
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def save(self, step: int, state) -> None:
+        if self._err:
+            raise self._err
+        host_state = jax.tree.map(
+            lambda p: cm.Param(np.asarray(jax.device_get(p.value)), p.axes),
+            state, is_leaf=cm.is_param)
+        self._q.put((step, host_state))   # blocks iff a save is in flight
+
+    def wait(self) -> None:
+        self._q.join()
+        if self._err:
+            raise self._err
+
+    def close(self) -> None:
+        self.wait()
+        self._q.put(None)
+        self._thread.join(timeout=10)

@@ -1,0 +1,28 @@
+"""Nirvana core — the paper's contribution.
+
+Semantic-operator plan IR, selectivity cost model, NL transformation rules,
+random-walk agentic logical optimizer (Alg. 1), LLM-as-a-judge execution-
+consistency verifier, improvement-score physical optimizer (Alg. 2,
+Eqs. 2-8 with evaluation pushdown / computation reuse / capability-
+hypothesis approximation), backend tier cascade, plan executor, and the
+SemanticDataFrame user API.
+"""
+from repro.core.table import Table                                # noqa: F401
+from repro.core.plan import (LogicalPlan, Operator,               # noqa: F401
+                             MAP, FILTER, REDUCE, RANK)
+from repro.core.cost import (DEFAULT_TIERS, TIER_ORDER, TierSpec,  # noqa: F401
+                             plan_cost)
+from repro.core.backends import (Backend, SimulatedBackend,       # noqa: F401
+                                 UsageMeter, Usage, make_backends,
+                                 UDFOracle)
+from repro.core.improvement import (improvement_scores,          # noqa: F401
+                                    OutputStore, ESTIMATORS)
+from repro.core.logical_optimizer import (LogicalOptConfig,       # noqa: F401
+                                          optimize as optimize_logical,
+                                          optimize_beam)
+from repro.core.physical_optimizer import (PhysicalOptConfig,     # noqa: F401
+                                           optimize as optimize_physical,
+                                           select_tier, smart_select)
+from repro.core.executor import execute, ExecutionResult          # noqa: F401
+from repro.core.dataframe import SemanticDataFrame, QueryReport   # noqa: F401
+from repro.core import judge, rewriter, rules, udf, semhash       # noqa: F401

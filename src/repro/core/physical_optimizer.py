@@ -1,0 +1,189 @@
+"""Cost-aware physical plan optimizer — paper §4, Algorithm 2.
+
+Assigns the most cost-effective backend tier to every LLM operator of a
+logical plan. Per operator: compute improvement scores I_{m1->m} over a
+data sample (estimator selectable: exact / pushdown / reuse / approx — the
+paper's headline configuration is `approx`, Eqs. 6-8), then upgrade from
+the cheapest tier m1 only while the *marginal* improvement clears the
+user's margin dI_min.
+
+The sample flows through the plan operator-by-operator with the already-
+selected backends (matching the paper's optimize-then-execute pipeline in
+Fig. 4), so downstream operators are scored on realistic inputs.
+
+Sync vs async (Table 9): call latencies are metered per backend; `sync`
+reports the sequential sum, `async` the makespan over `concurrency`
+workers — both for the optimization phase and for execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.core import backends as bk
+from repro.core import executor as ex
+from repro.core import improvement as imp
+from repro.core import plan as plan_ir
+from repro.core import udf as udf_mod
+from repro.core.table import Table
+
+
+@dataclasses.dataclass
+class PhysicalOptConfig:
+    delta_min: float = 0.20        # improvement margin (paper §5.1.4: 20%)
+    sample_ratio: float = 0.05
+    sample_min: int = 8
+    sample_max: int = 64
+    estimator: str = "approx"      # exact | pushdown | reuse | approx
+    max_cond_eval: int = 16        # bound conditional-term evaluations
+    concurrency: int = 16          # async worker count
+    mode: str = "async"            # sync | async
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class PhysicalOptResult:
+    plan: plan_ir.LogicalPlan               # with tiers assigned
+    assignments: Dict[int, str]             # op index -> tier
+    scores: Dict[int, Dict[str, float]]     # op index -> improvement scores
+    meter: bk.UsageMeter                    # optimization-phase usage
+    opt_wall_s: float
+
+
+def select_tier(scores: Dict[str, float], delta_min: float,
+                order=("m2", "m3", "m*")) -> str:
+    """Algorithm 2's greedy upgrade: start at m1, upgrade tier-by-tier while
+    the marginal improvement I_curr - I_last exceeds the margin."""
+    chosen, i_last = "m1", 0.0
+    for m in order:
+        i_curr = scores[m]
+        if i_curr - i_last >= delta_min:
+            chosen, i_last = m, i_curr
+    return chosen
+
+
+def _wall(meter: bk.UsageMeter, mode: str, concurrency: int) -> float:
+    total = meter.total
+    if mode == "sync":
+        return total.latency_s
+    calls = max(1, total.calls)
+    per_call = total.latency_s / calls
+    return math.ceil(calls / max(1, concurrency)) * per_call
+
+
+def optimize(plan: plan_ir.LogicalPlan, table: Table,
+             backends: Dict[str, bk.Backend],
+             cfg: PhysicalOptConfig = PhysicalOptConfig()
+             ) -> PhysicalOptResult:
+    n_sample = min(max(int(table.n_rows * cfg.sample_ratio), cfg.sample_min),
+                   cfg.sample_max, table.n_rows)
+    sample = ex.with_rowids(table.sample(n_sample, seed=cfg.seed))
+
+    meter = bk.UsageMeter()
+    assignments: Dict[int, str] = {}
+    all_scores: Dict[int, Dict[str, float]] = {}
+
+    cur = sample
+    for k, op in enumerate(plan.ops):
+        if cur.n_rows == 0:
+            if op.is_llm:
+                assignments[k] = "m1"
+            continue
+        values = cur.resolve(op.input_column)
+        if op.is_llm:
+            res = imp.improvement_scores(
+                backends, op, values, method=cfg.estimator, meter=meter,
+                max_cond_eval=(cfg.max_cond_eval
+                               if cfg.estimator == "approx" else None))
+            tier = select_tier(res.scores, cfg.delta_min)
+            assignments[k] = tier
+            all_scores[k] = dict(res.scores)
+        # flow the sample forward using the chosen tier (or the UDF)
+        cur = _apply_op(op, cur, values, backends,
+                        assignments.get(k, "m1"), meter)
+
+    tiered = plan.with_tiers(assignments)
+    return PhysicalOptResult(plan=tiered, assignments=assignments,
+                             scores=all_scores, meter=meter,
+                             opt_wall_s=_wall(meter, cfg.mode,
+                                              cfg.concurrency))
+
+
+def _apply_op(op: plan_ir.Operator, table: Table, values,
+              backends: Dict[str, bk.Backend], tier: str,
+              meter: bk.UsageMeter) -> Table:
+    """Advance the optimizer's sample through one operator."""
+    if op.udf is not None:
+        compiled = udf_mod.resolve_udf(op)
+        if op.kind == plan_ir.FILTER:
+            return table.select([bool(compiled.fn(v)) for v in values])
+        if op.kind == plan_ir.MAP:
+            return table.with_column(op.output_column,
+                                     [compiled.fn(v) for v in values])
+        return table
+    outs = backends[tier].run_values(op, values, meter=meter)
+    if op.kind == plan_ir.FILTER:
+        mask = [bool(o) if isinstance(o, bool) else
+                str(o).strip().lower().startswith(("true", "yes"))
+                for o in outs]
+        return table.select(mask)
+    if op.kind == plan_ir.MAP:
+        return table.with_column(op.output_column, outs)
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Smart [13] comparison baselines (Table 9): single-operator model selection
+# without pushdown/reuse/approx, in three flavours.
+# ---------------------------------------------------------------------------
+
+def smart_select(op: plan_ir.Operator, values,
+                 backends: Dict[str, bk.Backend], delta_min: float,
+                 variant: str = "exhaustive",
+                 meter: Optional[bk.UsageMeter] = None):
+    """Smart-style selection for one operator.
+
+    exhaustive   every tier runs the full sample; exact Eq.-2 scores
+    efficient    early-exits the tier loop once a tier clears the margin
+    multi-model  splits records among tiers (mixed-integer-ish heuristic):
+                 each tier runs a 1/|M| slice plus m* on everything
+    """
+    meter = meter if meter is not None else bk.UsageMeter()
+    store = imp.OutputStore(backends, op, values, meter=meter)
+    n = store.n
+    idx = list(range(n))
+    if variant == "exhaustive":
+        res = imp.improvement_exact(store)
+        return select_tier(res.scores, delta_min), res.scores, meter
+    if variant == "efficient":
+        store.ensure("m1", idx)
+        store.ensure("m*", idx)
+        scores = {}
+        chosen, i_last = "m1", 0.0
+        for m in ("m2", "m3", "m*"):
+            store.ensure(m, idx)
+            s = sum(store.eq(m, "m*", i) and not store.eq("m1", m, i)
+                    for i in idx) / n if m != "m*" else \
+                sum(not store.eq("m1", "m*", i) for i in idx) / n
+            scores[m] = s
+            if s - i_last >= delta_min:
+                chosen, i_last = m, s
+                break   # early exit: first sufficient tier wins
+        for m in ("m2", "m3", "m*"):
+            scores.setdefault(m, 0.0)
+        return chosen, scores, meter
+    # multi-model
+    store.ensure("m*", idx)
+    scores = {}
+    k = max(1, n // 3)
+    slices = {"m2": idx[:k], "m3": idx[k:2 * k], "m*": idx}
+    for m, sl in slices.items():
+        if m == "m*":
+            scores[m] = sum(not store.eq("m1", "m*", i) for i in idx) / n
+            continue
+        store.ensure(m, sl)
+        store.ensure("m1", sl)
+        scores[m] = (sum(store.eq(m, "m*", i) and not store.eq("m1", m, i)
+                         for i in sl) / max(1, len(sl)))
+    return select_tier(scores, delta_min), scores, meter

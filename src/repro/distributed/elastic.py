@@ -1,0 +1,53 @@
+"""Elastic re-meshing: move a training state between meshes of different
+sizes without retraining.
+
+Checkpoints store *logical* arrays + axis names (never device layouts), so
+scaling from N to M chips is: restore with the new mesh's sharding rules.
+The only constraint is divisibility, and the sharding rules already fall
+back to replication for non-dividing dims — so any (data, model) factoring
+of the new chip count is a legal restore target.
+
+``plan_remesh`` picks the new mesh shape for a chip budget; ``remesh``
+re-materializes a live state tree onto a new mesh in-process (used when a
+pod is drained but the job keeps running on the remainder).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+
+from repro.distributed import sharding as shd
+from repro.models import common as cm
+
+
+def plan_remesh(n_chips: int, *, model_parallel: Optional[int] = None,
+                prefer_model: int = 16) -> Tuple[int, int]:
+    """(data, model) factoring for a chip budget. Keeps the model axis at
+    the largest power-of-two divisor <= prefer_model so TP layouts survive
+    scale-downs (e.g. 512 -> 256 chips keeps model=16, halves data)."""
+    if model_parallel is not None:
+        if n_chips % model_parallel:
+            raise ValueError(f"{n_chips} chips not divisible by "
+                             f"model={model_parallel}")
+        return n_chips // model_parallel, model_parallel
+    m = 1
+    while m * 2 <= prefer_model and n_chips % (m * 2) == 0:
+        m *= 2
+    return n_chips // m, m
+
+
+def remesh(state, old_mesh, new_mesh, rules_new: dict):
+    """Reshard a live Param tree onto `new_mesh` under `rules_new`.
+
+    Implementation: gather each leaf to host (at scale: all-gather only the
+    shards that move; XLA's resharding transfer does this when both meshes
+    are visible — on a single controller we route via host), then place
+    with the new NamedSharding."""
+    def leaf(p):
+        arr = jax.device_get(p.value)
+        sharding = shd.NamedSharding(
+            new_mesh, shd.spec_for(arr.shape, p.axes, rules_new, new_mesh))
+        return cm.Param(jax.device_put(arr, sharding), p.axes)
+    return jax.tree.map(leaf, state, is_leaf=cm.is_param)

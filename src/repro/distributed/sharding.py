@@ -1,0 +1,180 @@
+"""Logical-axis -> mesh sharding rules (DP / FSDP / TP / EP / SP).
+
+Every Param carries logical axis names; ``make_rules`` maps them to mesh
+axes per (config, mode) and ``sharding_for_tree`` materializes
+NamedShardings with automatic fallback: a dim whose size does not divide the
+assigned mesh axes — or whose mesh axis is already taken by an earlier dim —
+falls back to replication. This is what lets 14/25/40-head archs and
+non-multiple-of-16 vocabs compile on a 16-way model axis (documented
+baseline inefficiency; see EXPERIMENTS.md §Perf).
+
+Modes:
+  train  FSDP (embed dim over `data`) x TP (heads/mlp/vocab/expert over
+         `model`); batch over (`pod`, `data`).
+  serve  TP only; params replicated over `data`; decode KV cache sharded on
+         kv_heads when divisible, else on the sequence dim (SP fallback).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import common as cm
+
+# ---------------------------------------------------------------------------
+# Activation sharding context: model code calls ``constrain(x, axes)`` on hot
+# intermediates; without an active context it is a no-op (CPU unit tests),
+# with one (dry-run / launch scripts) it pins GSPMD propagation so batch/head
+# dims stay sharded through scans and remat. See EXPERIMENTS.md §Perf.
+# ---------------------------------------------------------------------------
+
+_ACT = contextvars.ContextVar("activation_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict):
+    token = _ACT.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACT.reset(token)
+
+
+def constrain(x, axes: tuple):
+    """Apply a sharding constraint by logical axis names (no-op w/o ctx)."""
+    ctx = _ACT.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(x.shape, axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_if(x, axes: tuple, key: str):
+    """constrain(), but only when rule `key` is mapped — a constraint with
+    an unmapped key would PIN the tensor replicated and override GSPMD's
+    (often better) propagated choice."""
+    ctx = _ACT.get()
+    if ctx is None or ctx[1].get(key) is None:
+        return x
+    return constrain(x, axes)
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_rules(cfg, mesh: Mesh, mode: str = "train",
+               overrides: Optional[dict] = None) -> dict:
+    """mode: train | prefill | serve (decode).
+
+    Attention sharding policy (§Perf iteration 1): when kv/q heads do not
+    divide the model axis, the old fallback sharded `kv_seq` — GSPMD then
+    all-gathers the (.., q_chunk, kv_seq) score tensor inside every
+    layer x chunk loop for the softmax (measured 54 TB/chip for
+    deepseek-67b prefill_32k). Instead, shard the attention *q-chunk* dim
+    over `model` ("attn_q") and replicate K/V: scores/softmax/AV all stay
+    local, and the only added traffic is the per-chunk output gather
+    (~MBs). Decode keeps kv_seq sharding — its q length is 1, and the
+    sharded cache is what bounds per-chip HBM."""
+    model_n = mesh.shape["model"]
+    kv_shardable = cfg.n_kv_heads > 0 and cfg.n_kv_heads % model_n == 0
+    heads_shardable = cfg.n_heads > 0 and cfg.n_heads % model_n == 0
+    attn_fallback = cfg.n_heads > 0 and not (kv_shardable and
+                                             heads_shardable)
+    # §Perf iteration 4: prefill processes ~64k tokens/device, so
+    # activation all-reduces (Megatron TP) cost ~2 x tokens x d_model per
+    # layer (~7.5 GB for deepseek-67b) while the layer's weights are only
+    # ~1.4 GB. Weight-gathered sequence parallelism (ZeRO-3 style: params
+    # sharded over `data`, gathered per layer; activations sharded over
+    # `model` along the sequence) is strictly cheaper whenever
+    # tokens/device * d_model >> layer params. Attention-only archs use it
+    # for prefill; SSM/hybrid keep TP (their prefill is not
+    # collective-bound and the chunked scan dislikes seq sharding).
+    zero3_prefill = (mode == "prefill" and cfg.n_heads > 0
+                     and cfg.ssm is None)
+    park = "data" if zero3_prefill else "model"
+    rules = {
+        "layer": None,
+        "embed": "data" if mode == "train" else None,
+        "embed2": park,
+        "vocab": park,
+        "heads": park,       # non-dividing head counts fall back to
+        "kv_heads": park,    # replication in spec_for automatically
+        "head_dim": None,
+        "mlp": park,
+        "expert": park,
+        "q_lora": None,
+        "kv_lora": None,
+        "ssm_inner": "model",
+        "ssm_conv_ch": "model",
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "conv": None,
+        # activations / caches
+        "batch": dp_axes(mesh),
+        "seq": "model" if zero3_prefill else None,
+        # train: shard scores on q-chunks ONLY when q heads shard but KV
+        # heads don't (deepseek/internvl/granite class — measured 2-4x);
+        # for heads-unshardable archs the backward pass of seq-sharded
+        # attention costs more than it saves (measured regressions on
+        # minicpm/hymba/qwen2) — they keep the kv_seq fallback.
+        "attn_q": ("model" if (zero3_prefill or
+                               (mode == "train" and heads_shardable
+                                and not kv_shardable)) else None),
+        "kv_seq": ("model" if (not kv_shardable and mode == "serve")
+                   else ("model" if zero3_prefill else
+                         ("model" if (mode == "train" and not kv_shardable
+                                      and not heads_shardable) else None))),
+        "enc_seq": None,
+        "embed_act": None,   # activation d_model dim (never FSDP-sharded)
+    }
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def spec_for(shape: tuple, axes: tuple, rules: dict, mesh: Mesh) -> P:
+    used = set()
+    parts = []
+    for dim, ax in zip(shape, axes):
+        assign = rules.get(ax)
+        if assign is None:
+            parts.append(None)
+            continue
+        assign_t = assign if isinstance(assign, tuple) else (assign,)
+        size = math.prod(mesh.shape[a] for a in assign_t)
+        if any(a in used for a in assign_t) or dim % size != 0:
+            parts.append(None)
+            continue
+        used.update(assign_t)
+        parts.append(assign_t if len(assign_t) > 1 else assign_t[0])
+    return P(*parts)
+
+
+def sharding_for_tree(tree, rules: dict, mesh: Mesh):
+    """Param tree (values may be ShapeDtypeStructs) -> NamedSharding tree."""
+    def leaf(p):
+        return NamedSharding(mesh, spec_for(p.value.shape, p.axes, rules, mesh))
+    return jax.tree.map(leaf, tree, is_leaf=cm.is_param)
+
+
+def batch_sharding(specs: dict, rules: dict, mesh: Mesh):
+    """Input batch dict (name -> ShapeDtypeStruct) -> shardings.
+
+    Convention: dim 0 is batch, the rest replicated.
+    """
+    out = {}
+    for name, sds in specs.items():
+        axes = ("batch",) + (None,) * (len(sds.shape) - 1)
+        out[name] = NamedSharding(mesh, spec_for(sds.shape, axes, rules, mesh))
+    return out
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,4 @@
+"""Serving runtime: continuous-batching generation engine + JAX backend."""
+from repro.engine.engine import (GenerationEngine, ContinuousBatcher,  # noqa: F401
+                                 Request)
+from repro.engine.jax_backend import JAXBackend, render_prompt        # noqa: F401

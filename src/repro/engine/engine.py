@@ -1,0 +1,211 @@
+"""Serving engine: continuous-batching generation over the model zoo.
+
+Slot-based runtime in the vLLM mold, adapted to JAX/TPU:
+
+  * a fixed slot-batched decode cache (``init_cache(..., per_slot_pos=True)``)
+    — every slot decodes at its own depth; KV writes are per-slot one-hot
+    blends (models/attention.write_kv)
+  * prefill runs per request (B=1, lengths bucketed to limit recompiles)
+    and is *inserted* into the slot batch with dynamic_update_slice along
+    the batch axis of every cache leaf
+  * decode steps run over all slots every tick; finished/empty slots decode
+    garbage that the next insert overwrites (the standard trade: one wasted
+    lane beats a re-trace)
+
+The engine is architecture-agnostic: GQA / MLA KV caches and SSM / hybrid
+recurrent states all flow through the same Param-tree insert because cache
+leaves carry their logical axes ("batch" marks the slot dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import ByteTokenizer
+from repro.models import common as cm
+
+PREFILL_ALIGN = 16
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: str
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    # filled during processing
+    prompt_ids: Optional[list] = None
+    output_ids: Optional[list] = None
+    slot: int = -1
+    prefill_s: float = 0.0
+    submitted_s: float = 0.0
+    done_s: float = 0.0
+
+    @property
+    def text(self) -> str:
+        return ByteTokenizer().decode(self.output_ids or [])
+
+
+def _batch_index(p: cm.Param) -> int:
+    return p.axes.index("batch")
+
+
+class GenerationEngine:
+    def __init__(self, bundle, params, *, max_len: int = 256,
+                 n_slots: int = 4, dtype=jnp.float32,
+                 tokenizer: Optional[ByteTokenizer] = None):
+        self.bundle = bundle
+        self.params = params
+        self.max_len = max_len
+        self.n_slots = n_slots
+        self.dtype = dtype
+        self.tok = tokenizer or ByteTokenizer()
+        self.cache = bundle.init_cache(n_slots, max_len, dtype=dtype,
+                                       per_slot_pos=True)
+        self.last_token = jnp.zeros((n_slots, 1), jnp.int32)
+        self.active = np.zeros((n_slots,), bool)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self._decode_jit = jax.jit(
+            lambda p, c, t: bundle.decode_step(p, c, t, dtype=dtype))
+        self._prefill_jit = jax.jit(
+            lambda p, b: bundle.prefill(p, b, max_len=max_len, dtype=dtype))
+        self.stats = {"decode_steps": 0, "prefills": 0, "occupancy_sum": 0.0,
+                      "decode_s": 0.0, "prefill_s": 0.0}
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i in range(self.n_slots) if not self.active[i]]
+
+    def insert(self, req: Request, slot: int) -> Optional[Request]:
+        """Prefill one request and splice it into the slot batch. Returns
+        the request if it finished at prefill (prompt fills the window)."""
+        t0 = time.perf_counter()
+        ids = self.tok.encode(req.prompt)[: self.max_len - 1]
+        req.prompt_ids = ids
+        req.output_ids = []
+        req.slot = slot
+        tokens = self.tok.pad_batch([ids], align=PREFILL_ALIGN)
+        logits, cache1 = self._prefill_jit(self.params,
+                                           {"tokens": jnp.asarray(tokens)})
+        # prefill padded the prompt; the next position is len(ids)
+        pos_next = len(ids)
+
+        def splice(dst: cm.Param, src: cm.Param) -> cm.Param:
+            if dst.axes == ("batch",) or dst.axes == ():   # pos vector
+                return dst
+            bi = _batch_index(dst)
+            idx = [0] * dst.value.ndim
+            idx[bi] = slot
+            return cm.Param(jax.lax.dynamic_update_slice(
+                dst.value, src.value.astype(dst.value.dtype), tuple(idx)),
+                dst.axes)
+
+        self.cache = jax.tree.map(splice, self.cache, cache1,
+                                  is_leaf=cm.is_param)
+        pos = self.cache["pos"].value.at[slot].set(pos_next)
+        self.cache["pos"] = cm.Param(pos, ("batch",))
+        nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        self.last_token = self.last_token.at[slot, 0].set(nxt)
+        req.output_ids.append(int(nxt))
+        self.stats["prefills"] += 1
+        req.prefill_s = time.perf_counter() - t0
+        self.stats["prefill_s"] += req.prefill_s
+        if (len(ids) + 1 >= self.max_len
+                or len(req.output_ids) >= req.max_new_tokens):
+            req.done_s = time.perf_counter()
+            return req                      # finished at prefill
+        self.active[slot] = True
+        self.slot_req[slot] = req
+        return None
+
+    def decode_tick(self, key=None) -> List[Request]:
+        """One decode step across all slots; returns finished requests."""
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode_jit(self.params, self.cache,
+                                              self.last_token)
+        # keep idle slots parked at position 0 (their writes are overwritten
+        # by the next insert; parking avoids pos growing past max_len)
+        pos = self.cache["pos"].value
+        pos = jnp.where(jnp.asarray(self.active), pos, 0)
+        pos = jnp.minimum(pos, self.max_len - 1)
+        self.cache["pos"] = cm.Param(pos, ("batch",))
+
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        if key is not None:
+            temps = np.array([self.slot_req[i].temperature
+                              if self.slot_req[i] else 0.0
+                              for i in range(self.n_slots)], np.float32)
+            if (temps > 0).any():
+                g = jax.random.gumbel(key, logits[:, -1].shape)
+                samp = jnp.argmax(
+                    logits[:, -1] / jnp.maximum(temps[:, None], 1e-6) + g,
+                    axis=-1).astype(jnp.int32)
+                nxt = jnp.where(jnp.asarray(temps > 0), samp, nxt)
+        self.last_token = nxt[:, None]
+        self.stats["decode_steps"] += 1
+        self.stats["occupancy_sum"] += float(self.active.mean())
+        self.stats["decode_s"] += time.perf_counter() - t0
+
+        done: List[Request] = []
+        nxt_host = np.asarray(nxt)
+        for i in range(self.n_slots):
+            req = self.slot_req[i]
+            if req is None or not self.active[i]:
+                continue
+            req.output_ids.append(int(nxt_host[i]))
+            eos = nxt_host[i] == self.tok.eos_id
+            full = len(req.output_ids) >= req.max_new_tokens
+            over = len(req.prompt_ids) + len(req.output_ids) >= self.max_len
+            if eos or full or over:
+                req.done_s = time.perf_counter()
+                self.active[i] = False
+                self.slot_req[i] = None
+                done.append(req)
+        return done
+
+    @property
+    def occupancy(self) -> float:
+        n = max(1, self.stats["decode_steps"])
+        return self.stats["occupancy_sum"] / n
+
+
+class ContinuousBatcher:
+    """Request queue + slot scheduler over a GenerationEngine."""
+
+    def __init__(self, engine: GenerationEngine):
+        self.engine = engine
+        self.queue: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self._next_rid = 0
+
+    def submit(self, prompt: str, max_new_tokens: int = 32,
+               temperature: float = 0.0) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, prompt, max_new_tokens, temperature,
+                      submitted_s=time.perf_counter())
+        self.queue.append(req)
+        return rid
+
+    def run(self, key=None) -> Dict[int, Request]:
+        """Drive to completion: fill free slots, tick, repeat."""
+        while self.queue or self.engine.active.any():
+            for slot in self.engine.free_slots():
+                if not self.queue:
+                    break
+                done = self.engine.insert(self.queue.pop(0), slot)
+                if done is not None:
+                    self.finished[done.rid] = done
+            if self.engine.active.any():
+                if key is not None:
+                    key, sub = jax.random.split(key)
+                else:
+                    sub = None
+                for req in self.engine.decode_tick(sub):
+                    self.finished[req.rid] = req
+        return self.finished

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  flash_attention   prefill/train attention (online softmax, VMEM tiling)
+  decode_attention  one-token decode vs long KV (split-K flash decoding)
+  ssd_scan          Mamba2/Hymba chunked SSD dual form
+  similarity        batched cosine — the paper's improvement-score compare
+
+``ops`` holds the jit'd public wrappers (layout, padding, CPU-interpret
+dispatch); ``ref`` the pure-jnp oracles each kernel is tested against.
+"""

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel. The kernels are validated
+against these in tests/test_kernels.py across shape/dtype sweeps."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Naive full-matrix attention oracle.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D). GQA via head grouping.
+    window > 0: sliding-window causal. Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        # align last query to last key (supports sq < sk prefill continuation)
+        offset = sk - sq
+        mask &= (q_pos + offset) >= k_pos
+        if window:
+            mask &= (q_pos + offset) - k_pos < window
+    elif window:
+        mask &= jnp.abs(q_pos - k_pos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len):
+    """Single-position decode oracle. q: (B, 1, Hq, D); caches
+    (B, S, Hkv, D); cache_len scalar or (B,). Returns (B, 1, Hq, D)."""
+    b, _, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = hq // hkv
+    qf = (q.astype(jnp.float32) * d ** -0.5).reshape(b, hkv, g, d)
+    sc = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    valid = jnp.arange(s)[None, :] < jnp.reshape(cache_len, (-1, 1))
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def ssd_ref(dx, dA, B, C, initial_state=None):
+    """Naive sequential SSD recurrence oracle (fp32 state path).
+
+    dx: (B, S, H, P)  inputs pre-scaled by dt
+    dA: (B, S, H)     log-decay per step
+    B, C: (B, S, G, N) grouped projections
+    Returns (y (B,S,H,P) in dx.dtype, final_state (B,H,N,P) fp32).
+    """
+    b, s, h, p = dx.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=2)   # (B,S,H,N)
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+    dxf = dx.astype(jnp.float32)
+    dAf = dA.astype(jnp.float32)
+    state = (initial_state if initial_state is not None
+             else jnp.zeros((b, h, n, p), jnp.float32))
+
+    def step(state, t):
+        decay = jnp.exp(dAf[:, t])                         # (B,H)
+        upd = jnp.einsum("bhn,bhp->bhnp", Bh[:, t], dxf[:, t])
+        state = state * decay[:, :, None, None] + upd
+        y_t = jnp.einsum("bhn,bhnp->bhp", Ch[:, t], state)
+        return state, y_t
+
+    state, ys = jax.lax.scan(step, state, jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1)                             # (B,S,H,P)
+    return y.astype(dx.dtype), state
+
+
+def cosine_matrix_ref(a, b):
+    """a: (M, D), b: (N, D) rows L2-normalized -> (M, N) fp32."""
+    return (a.astype(jnp.float32) @ b.astype(jnp.float32).T)
+
+
+def rowwise_cosine_ref(a, b):
+    """Aligned rows: (M, D), (M, D) -> (M,) fp32."""
+    return jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32), axis=-1)

@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out artifacts/dryrun
+
+The first two lines of this module force 512 host platform devices BEFORE
+any jax import so ``jax.make_mesh((2,16,16), ...)`` can build the production
+mesh on this CPU-only container. Do not import this module from code that
+needs real device counts (tests/benchmarks import nothing from here).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import roofline as rl
+from repro.configs import (ARCH_IDS, SHAPES, SUBQUADRATIC, get_config, cells)
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models import common as cm
+from repro.models import registry
+from repro.training import optimizer as opt_mod
+from repro.training import train_loop
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    bundle = registry.build(get_config(arch))
+    return bundle.batch_specs(SHAPES[shape_name])
+
+
+def shardings_like(tree, rules, mesh):
+    """Shardings for a pytree: Params via logical axes, plain leaves
+    replicated."""
+    def leaf(x):
+        if cm.is_param(x):
+            return jax.tree.map(
+                lambda _: shd.NamedSharding(
+                    mesh, shd.spec_for(x.value.shape, x.axes, rules, mesh)),
+                x, is_leaf=lambda y: not cm.is_param(y))
+        return shd.replicated(mesh)
+    return jax.tree.map(leaf, tree, is_leaf=cm.is_param)
+
+
+def _cast_bf16(shapes_tree):
+    def leaf(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(x.shape, jnp.bfloat16)
+        return x
+    return jax.tree.map(leaf, shapes_tree)
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, moe_impl="gather",
+               microbatches=1, serve_dtype=jnp.bfloat16, kv_int8=False):
+    """Returns (jit_fn, example args, rules). ALL tracing (including
+    eval_shape) must happen inside the activation-sharding context —
+    traced jaxprs are cached by function identity, so a constraint-free
+    trace made outside the context would be silently reused by lower()."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mode = {"train": "train", "prefill": "prefill",
+            "decode": "serve"}[shape.kind]
+    rules = shd.make_rules(cfg, mesh, mode)
+    with shd.activation_sharding(mesh, rules):
+        fn, args = _build_cell_traced(cfg, shape, mesh, rules,
+                                      moe_impl=moe_impl,
+                                      microbatches=microbatches,
+                                      serve_dtype=serve_dtype,
+                                      kv_int8=kv_int8)
+    return fn, args, rules
+
+
+def _build_cell_traced(cfg, shape, mesh, rules, *, moe_impl, microbatches,
+                       serve_dtype, kv_int8=False):
+    bundle = registry.build(cfg)
+    batch_specs = bundle.batch_specs(shape)
+    key = jax.random.PRNGKey(0)
+
+    if shape.kind == "train":
+        moe_ctx = None
+        if cfg.moe is not None and moe_impl == "shardmap":
+            moe_ctx = {"impl": "shardmap", "mesh": mesh,
+                       "dp_axes": shd.dp_axes(mesh)}
+        opt_cfg = opt_mod.AdamWConfig()
+        step = train_loop.make_train_step(
+            bundle, opt_cfg, dtype=jnp.bfloat16, remat=True, moe_ctx=moe_ctx,
+            microbatches=microbatches)
+        state_shapes = jax.eval_shape(
+            lambda: train_loop.init_train_state(bundle, key))
+        state_sh = shardings_like(state_shapes, rules, mesh)
+        batch_sh = shd.batch_sharding(batch_specs, rules, mesh)
+        metrics_shapes = jax.eval_shape(step, state_shapes, batch_specs)[1]
+        metrics_sh = jax.tree.map(lambda _: shd.replicated(mesh),
+                                  metrics_shapes)
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, metrics_sh),
+                     donate_argnums=(0,))
+        return fn, (state_shapes, batch_specs)
+
+    params_shapes = _cast_bf16(jax.eval_shape(bundle.init, key))
+    params_sh = shardings_like(params_shapes, rules, mesh)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return bundle.prefill(params, batch, max_len=None,
+                                  dtype=serve_dtype)
+        batch_sh = shd.batch_sharding(batch_specs, rules, mesh)
+        out_shapes = jax.eval_shape(fn, params_shapes, batch_specs)
+        out_sh = shardings_like(out_shapes, rules, mesh)
+        jfn = jax.jit(fn, in_shardings=(params_sh, batch_sh),
+                      out_shardings=out_sh)
+        return jfn, (params_shapes, batch_specs)
+
+    # decode: one new token against a KV cache of shape.seq_len
+    kv_kw = {"kv_dtype": jnp.int8} if kv_int8 else {}
+    cache_shapes = jax.eval_shape(
+        lambda: bundle.init_cache(shape.global_batch, shape.seq_len,
+                                  dtype=serve_dtype, **kv_kw))
+    cache_sh = shardings_like(cache_shapes, rules, mesh)
+    tok_specs = bundle.batch_specs(shape)
+    tok_sh = shd.batch_sharding(tok_specs, rules, mesh)
+
+    def fn(params, cache, token):
+        return bundle.decode_step(params, cache, token, dtype=serve_dtype)
+
+    out_shapes = jax.eval_shape(fn, params_shapes, cache_shapes,
+                                tok_specs["token"])
+    out_sh = shardings_like(out_shapes, rules, mesh)
+    jfn = jax.jit(fn, in_shardings=(params_sh, cache_sh, tok_sh["token"]),
+                  out_shardings=out_sh, donate_argnums=(1,))
+    return jfn, (params_shapes, cache_shapes, tok_specs["token"])
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             moe_impl="gather", microbatches=1, save_hlo=None,
+             kv_int8=False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "multi" if multi_pod else "single", "chips": chips,
+           "moe_impl": moe_impl, "microbatches": microbatches,
+           "kv_int8": kv_int8, "ok": False}
+    if shape_name == "long_500k" and arch not in SUBQUADRATIC:
+        rec.update(ok=True, skipped=True,
+                   skip_reason="full-attention arch; long_500k requires "
+                               "sub-quadratic context (see DESIGN.md)")
+        return rec
+    t0 = time.time()
+    try:
+        fn, args, rules = build_cell(arch, shape_name, mesh,
+                                     moe_impl=moe_impl,
+                                     microbatches=microbatches,
+                                     kv_int8=kv_int8)
+        with shd.activation_sharding(mesh, rules):
+            lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes") if hasattr(ma, k)}
+            arg_b = rec["memory_analysis"].get("argument_size_in_bytes", 0)
+            tmp_b = rec["memory_analysis"].get("temp_size_in_bytes", 0)
+            out_b = rec["memory_analysis"].get("output_size_in_bytes", 0)
+            ali_b = rec["memory_analysis"].get("alias_size_in_bytes", 0)
+            rec["bytes_per_device"] = int(arg_b + tmp_b + out_b - ali_b)
+        except Exception as e:  # pragma: no cover
+            rec["memory_analysis_error"] = str(e)
+
+        cost = {}
+        try:
+            cost = dict(compiled.cost_analysis())
+            rec["cost_analysis"] = {k: float(v) for k, v in cost.items()
+                                    if isinstance(v, (int, float))}
+        except Exception as e:  # pragma: no cover
+            rec["cost_analysis_error"] = str(e)
+
+        hlo = compiled.as_text()
+        if save_hlo:
+            with open(save_hlo, "w") as f:
+                f.write(hlo)
+        hstats = rl.parse_hlo(hlo)
+        coll = hstats.collectives
+        rec["collectives"] = {
+            "bytes_per_chip": coll.bytes_per_chip,
+            "counts": coll.counts,
+            "bytes_by_kind": coll.bytes_by_kind,
+        }
+        rec["dot_flops_per_device"] = hstats.dot_flops
+        mf = rl.model_flops_estimate(cfg, shape)
+        roof = rl.compute_roofline(cost, coll, chips, mf,
+                                   flops_override=hstats.dot_flops)
+        rec["roofline"] = {
+            "compute_s": roof.compute_s, "memory_s": roof.memory_s,
+            "collective_s": roof.collective_s, "dominant": roof.dominant,
+            "model_flops": mf,
+            "flops_per_device": roof.flops_per_device,
+            "useful_flops_ratio": roof.useful_flops_ratio,
+            "roofline_fraction": roof.roofline_fraction,
+            "step_time_s": roof.step_time_s,
+        }
+        rec["ok"] = True
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=8)
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--moe-impl", default="gather",
+                    choices=["gather", "shardmap"])
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8-quantized decode KV cache")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tagp = f"-{args.tag}" if args.tag else ""
+                name = f"{arch}__{shape}__{'multi' if mp else 'single'}{tagp}"
+                hlo_path = (os.path.join(args.out, name + ".hlo")
+                            if args.save_hlo else None)
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               moe_impl=args.moe_impl,
+                               microbatches=args.microbatches,
+                               save_hlo=hlo_path, kv_int8=args.kv_int8)
+                with open(os.path.join(args.out, name + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = ("SKIP" if rec.get("skipped")
+                          else "OK" if rec["ok"] else "FAIL")
+                n_fail += status == "FAIL"
+                dom = rec.get("roofline", {}).get("dominant", "-")
+                print(f"[{status:4s}] {name:60s} t={rec.get('total_s', 0):8.1f}s"
+                      f" dom={dom}", flush=True)
+                if status == "FAIL":
+                    print(rec.get("error"), flush=True)
+    print(f"done; failures={n_fail}", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Serving launcher — continuous-batching generation over a zoo model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+        --requests 16 --slots 4 --max-new 24
+
+Reports throughput, slot occupancy, and per-request latency percentiles.
+Full-size configs are proven via launch/dryrun.py (decode cells lower the
+same decode_step this engine drives).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced as reduce_cfg
+from repro.engine import ContinuousBatcher, GenerationEngine
+from repro.models import registry
+
+DEMO_PROMPTS = [
+    "Answer true or false. Instruction: The rating is higher than 8.5. "
+    "Input: 9.1 Answer:",
+    "Extract the genre: A crime story about a heist gone wrong.",
+    "Summarize: NEWLY BUILT DUPLEX WITH SWIMMING POOL, PRICE: N250m",
+    "Does the game support VR? Platforms: Windows, MacOS, VR supported.",
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=160)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_cfg(cfg)
+    bundle = registry.build(cfg)
+    params = bundle.init(jax.random.PRNGKey(args.seed))
+    print(f"[serve] arch={cfg.name} params={cfg.param_count()/1e6:.2f}M "
+          f"slots={args.slots} max_len={args.max_len}")
+
+    engine = GenerationEngine(bundle, params, max_len=args.max_len,
+                              n_slots=args.slots)
+    batcher = ContinuousBatcher(engine)
+    t0 = time.time()
+    for i in range(args.requests):
+        batcher.submit(DEMO_PROMPTS[i % len(DEMO_PROMPTS)] + f" [{i}]",
+                       max_new_tokens=args.max_new)
+    finished = batcher.run()
+    dt = time.time() - t0
+
+    lats = [r.done_s - r.submitted_s for r in finished.values()]
+    new_toks = sum(len(r.output_ids) for r in finished.values())
+    print(f"[serve] {len(finished)} requests in {dt:.2f}s  "
+          f"({new_toks / dt:,.1f} new tok/s)")
+    print(f"[serve] occupancy={engine.occupancy:.2f}  "
+          f"p50={np.percentile(lats, 50):.2f}s "
+          f"p99={np.percentile(lats, 99):.2f}s")
+    print(f"[serve] stats={engine.stats}")
+    return finished
+
+
+if __name__ == "__main__":
+    main()

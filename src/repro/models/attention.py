@@ -1,0 +1,315 @@
+"""Attention mixers: GQA (covers MHA/MQA), MLA (latent attention), plus the
+chunked XLA attention used for training/prefill (flash-style memory behaviour
+without Pallas — the Pallas kernel in ``repro.kernels`` is the TPU fast path;
+``repro.kernels.ops`` dispatches between them)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+NEG_INF = -1e30
+
+
+def _constrain(x, axes):
+    from repro.distributed import sharding as shd
+    return shd.constrain(x, axes)
+
+
+def _constrain_if(x, axes, key):
+    from repro.distributed import sharding as shd
+    return shd.constrain_if(x, axes, key)
+
+
+# ---------------------------------------------------------------------------
+# Chunked attention (XLA path): scan over query chunks; never materializes SxS
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      q_chunk=1024, logits_dtype=jnp.float32):
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D). GQA via head grouping.
+
+    window > 0 means sliding-window causal attention (each query attends the
+    previous `window` keys). q_offset: absolute position of q[0] relative to
+    k[0] (for prefill continuation). Returns (B, Sq, Hq, D).
+    """
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    dv = v.shape[-1]  # may differ from d (e.g. MLA)
+    groups = hq // hkv
+    scale = d ** -0.5
+    q = q * scale
+    # reshape q to (B, Sq, Hkv, G, D) so contraction maps onto kv heads
+    qg = q.reshape(b, sq, hkv, groups, d)
+
+    q_chunk = min(q_chunk, sq)
+    while sq % q_chunk:
+        q_chunk //= 2
+    n_chunks = sq // q_chunk
+
+    k_pos = jnp.arange(sk)
+    # STRIDED chunking: row r of chunk ci sits at global position
+    # ci + r*n_chunks. Under sequence-parallel sharding a contiguous chunk
+    # lives entirely inside ONE seq shard, so GSPMD all-gathers the whole
+    # q tensor per layer to redistribute it (measured 1 GiB/layer on
+    # codeqwen prefill — §Perf). A strided chunk takes q_chunk/16 rows
+    # from EVERY shard: the slice is already evenly sharded and no q/o
+    # gathers are needed. Compute and masking are position-parametric, so
+    # the result is identical for any chunk->position mapping.
+    qg5 = qg.reshape(b, q_chunk, n_chunks, hkv, groups, d)
+
+    def one_chunk(ci):
+        qs = qg5[:, :, ci]
+        # pin the einsum INPUT shardings: q-chunk carries the model axis
+        # when heads don't divide it ("attn_q" rule), K/V replicated —
+        # otherwise GSPMD picks a head-dim sharding for q and pays an
+        # involuntary remat + per-chunk gathers. Only applied when attn_q
+        # is mapped (unconditional pinning regressed divisible-head archs
+        # 16-18% — §Perf train iteration).
+        qs = _constrain_if(qs, ("batch", "attn_q", None, None, "head_dim"),
+                           "attn_q")
+        q_pos = q_offset + ci + jnp.arange(q_chunk) * n_chunks
+        # scores: (B, Hkv, G, Qc, Sk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qs, k,
+                       preferred_element_type=logits_dtype)
+        s = _constrain(s, ("batch", "kv_heads", None, "attn_q", None))
+        mask = jnp.ones((q_chunk, sk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if isinstance(window, jnp.ndarray):  # traced per-layer window (0=full)
+            mask &= (window <= 0) | (q_pos[:, None] - k_pos[None, :] < window)
+        elif window:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        p = _constrain(p, ("batch", "kv_heads", None, "attn_q", None))
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+        return _constrain(o.reshape(b, q_chunk, hq, dv),
+                          ("batch", "attn_q", "heads", "head_dim"))
+
+    if n_chunks == 1:
+        return one_chunk(0)
+    outs = jax.lax.map(one_chunk, jnp.arange(n_chunks))   # (N, B, Qc, Hq, Dv)
+    # inverse of the strided mapping: position = r*n_chunks + ci, so
+    # (qc-major, nc-minor) reshape restores sequence order
+    return jnp.moveaxis(outs, 0, 2).reshape(b, sq, hq, dv)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0):
+    """Single-position attention. q: (B, 1, Hq, D); caches (B, S, Hkv, D);
+    cache_len: (B,) or scalar number of valid cache entries (q's position ==
+    cache_len - 1 after the new KV was written)."""
+    b, _, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    groups = hq // hkv
+    qg = (q * d ** -0.5).reshape(b, hkv, groups, d)
+    s_logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                          preferred_element_type=jnp.float32)
+    k_pos = jnp.arange(s)
+    valid = k_pos[None, :] < jnp.reshape(cache_len, (-1, 1))
+    if isinstance(window, jnp.ndarray):
+        valid &= (window <= 0) | (
+            k_pos[None, :] >= jnp.reshape(cache_len, (-1, 1)) - window)
+    elif window:
+        valid &= k_pos[None, :] >= jnp.reshape(cache_len, (-1, 1)) - window
+    s_logits = jnp.where(valid[:, None, None, :], s_logits, NEG_INF)
+    p = jax.nn.softmax(s_logits, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache)
+    return o.reshape(b, 1, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg):
+    ks = jax.random.split(key, 4)
+    h, kv, d, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_model, cfg.head_dim
+    return {
+        "q": cm.dense(ks[0], d, (h, hd), ("embed", "heads", "head_dim"),
+                      bias=cfg.qkv_bias),
+        "k": cm.dense(ks[1], d, (kv, hd), ("embed", "kv_heads", "head_dim"),
+                      bias=cfg.qkv_bias),
+        "v": cm.dense(ks[2], d, (kv, hd), ("embed", "kv_heads", "head_dim"),
+                      bias=cfg.qkv_bias),
+        "o": cm.dense(ks[3], (h, hd), d, ("heads", "head_dim", "embed")),
+    }
+
+
+def gqa_project_qkv(p, x, positions, theta):
+    q = cm.apply_dense(p["q"], x)            # (B,S,H,hd)
+    k = cm.apply_dense(p["k"], x)            # (B,S,KV,hd)
+    v = cm.apply_dense(p["v"], x)
+    q = _constrain(cm.apply_rope(q, positions, theta),
+                   ("batch", "seq", "heads", "head_dim"))
+    k = _constrain(cm.apply_rope(k, positions, theta),
+                   ("batch", "seq", "kv_heads", "head_dim"))
+    v = _constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def gqa_forward(p, x, cfg, *, positions, window=0, causal=True):
+    q, k, v = gqa_project_qkv(p, x, positions, cfg.rope_theta)
+    o = chunked_attention(q, k, v, causal=causal, window=window)
+    return cm.apply_dense(p["o"], o, in_dims=2)
+
+
+def write_kv(cache, new, pos):
+    """Insert one position per sequence into a (B, S, ...) cache.
+
+    pos scalar: dynamic_update_slice (single shared position — the dry-run /
+    synchronous-batch path). pos (B,): per-slot one-hot blend (continuous
+    batching: every slot is at its own depth). The one-hot write streams the
+    cache once — the same traffic decode attention already pays."""
+    if getattr(pos, "ndim", 0) == 0 and not isinstance(pos, (list, tuple)):
+        idx = (0,) * 1 + (pos,) + (0,) * (cache.ndim - 2)
+        return jax.lax.dynamic_update_slice(
+            cache, new.astype(cache.dtype), idx)
+    s = cache.shape[1]
+    onehot = (jnp.arange(s)[None, :] == pos[:, None])
+    onehot = onehot.reshape(onehot.shape + (1,) * (cache.ndim - 2))
+    return jnp.where(onehot, new.astype(cache.dtype), cache)
+
+
+def gqa_decode(p, x, cache_k, cache_v, pos, cfg, *, window=0):
+    """x: (B,1,d); caches (B,S,KV,hd); pos: scalar or (B,) write index."""
+    q = cm.apply_dense(p["q"], x)
+    k = cm.apply_dense(p["k"], x)
+    v = cm.apply_dense(p["v"], x)
+    positions = (jnp.full((x.shape[0], 1), pos)
+                 if getattr(pos, "ndim", 0) == 0 else pos[:, None])
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    cache_k = write_kv(cache_k, k, pos)
+    cache_v = write_kv(cache_v, v, pos)
+    o = decode_attention(q, cache_k, cache_v, pos + 1, window=window)
+    return cm.apply_dense(p["o"], o, in_dims=2), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache (decode is memory-bound on the cache stream; int8 + a
+# per-(position, head) scale halves the bytes — §Perf pair C)
+# ---------------------------------------------------------------------------
+
+def quant_kv(x):
+    """x: (B, 1, KV, D) -> (int8 values, bf16 scales (B, 1, KV))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(x.astype(jnp.float32)
+                  / jnp.maximum(scale[..., None], 1e-8))
+    return jnp.clip(q, -127, 127).astype(jnp.int8), \
+        scale.astype(jnp.bfloat16)
+
+
+def dequant_kv(cache, scale, dtype):
+    """(B, S, KV, D) int8 x (B, S, KV) -> dtype. The convert+scale fuses
+    into the attention dot's operand read: HBM streams int8."""
+    return cache.astype(dtype) * scale[..., None].astype(dtype)
+
+
+def gqa_decode_q8(p, x, cache_k, cache_v, k_scale, v_scale, pos, cfg, *,
+                  window=0):
+    """gqa_decode against an int8-quantized KV cache."""
+    q = cm.apply_dense(p["q"], x)
+    k = cm.apply_dense(p["k"], x)
+    v = cm.apply_dense(p["v"], x)
+    positions = (jnp.full((x.shape[0], 1), pos)
+                 if getattr(pos, "ndim", 0) == 0 else pos[:, None])
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    kq, ks = quant_kv(k)
+    vq, vs = quant_kv(v)
+    cache_k = write_kv(cache_k, kq, pos)
+    cache_v = write_kv(cache_v, vq, pos)
+    k_scale = write_kv(k_scale, ks, pos)
+    v_scale = write_kv(v_scale, vs, pos)
+    kf = dequant_kv(cache_k, k_scale, x.dtype)
+    vf = dequant_kv(cache_v, v_scale, x.dtype)
+    o = decode_attention(q, kf, vf, pos + 1, window=window)
+    return (cm.apply_dense(p["o"], o, in_dims=2), cache_k, cache_v,
+            k_scale, v_scale)
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention) — DeepSeek-V2 / MiniCPM3 style
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg):
+    m = cfg.mla
+    ks = jax.random.split(key, 7)
+    d, h = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "q_down": cm.dense(ks[0], d, m.q_lora_rank, ("embed", "q_lora")),
+        "q_up": cm.dense(ks[1], m.q_lora_rank, (h, qk_head),
+                         ("q_lora", "heads", "head_dim")),
+        "kv_down": cm.dense(ks[2], d, m.kv_lora_rank, ("embed", "kv_lora")),
+        "k_rope": cm.dense(ks[3], d, (1, m.qk_rope_head_dim),
+                           ("embed", "kv_heads", "head_dim")),
+        "k_up": cm.dense(ks[4], m.kv_lora_rank, (h, m.qk_nope_head_dim),
+                         ("kv_lora", "heads", "head_dim")),
+        "v_up": cm.dense(ks[5], m.kv_lora_rank, (h, m.v_head_dim),
+                         ("kv_lora", "heads", "head_dim")),
+        "o": cm.dense(ks[6], (h, m.v_head_dim), d,
+                      ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_forward(p, x, cfg, *, positions):
+    """Training/prefill path: expand the latent to per-head K/V."""
+    m = cfg.mla
+    q = cm.apply_dense(p["q_up"], cm.apply_dense(p["q_down"], x))  # (B,S,H,qk)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = cm.apply_dense(p["kv_down"], x)                         # (B,S,r)
+    k_rope = cm.apply_dense(p["k_rope"], x)                        # (B,S,1,rd)
+    k_rope = cm.apply_rope(k_rope, positions, cfg.rope_theta)
+    k_nope = cm.apply_dense(p["k_up"], c_kv)                       # (B,S,H,nd)
+    v = cm.apply_dense(p["v_up"], c_kv)                            # (B,S,H,vd)
+
+    k_rope_b = jnp.broadcast_to(k_rope, k_rope.shape[:2] + (cfg.n_heads,
+                                                            m.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    o = chunked_attention(q_full, k_full, v, causal=True)
+    return cm.apply_dense(p["o"], o, in_dims=2)
+
+
+def mla_decode(p, x, cache_ckv, cache_krope, pos, cfg):
+    """Absorbed decode: score against the cached latent directly.
+
+    cache_ckv: (B, S, r);  cache_krope: (B, S, rd); pos scalar or (B,).
+    q_latent[h] = W_uk[h]^T q_nope[h]  ->  score = q_latent . c_kv + q_rope . k_rope
+    output o[h] = (attn . c_kv) @ W_uv[h]  (v absorbed after the fact).
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    q = cm.apply_dense(p["q_up"], cm.apply_dense(p["q_down"], x))  # (B,1,H,qk)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    positions = (jnp.full((b, 1), pos) if getattr(pos, "ndim", 0) == 0
+                 else pos[:, None])
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = cm.apply_dense(p["kv_down"], x)                         # (B,1,r)
+    k_rope = cm.apply_dense(p["k_rope"], x)[:, :, 0]               # (B,1,rd)
+    k_rope = cm.apply_rope(k_rope[:, :, None], positions, cfg.rope_theta)[:, :, 0]
+    cache_ckv = write_kv(cache_ckv, c_kv, pos)
+    cache_krope = write_kv(cache_krope, k_rope, pos)
+
+    w_uk = p["k_up"]["w"].value.astype(x.dtype)                    # (r,H,nd)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)         # (B,H,r)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s_lat = jnp.einsum("bhr,bsr->bhs", q_lat, cache_ckv,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], cache_krope,
+                        preferred_element_type=jnp.float32)
+    s = (s_lat + s_rope) * scale
+    valid = (jnp.arange(cache_ckv.shape[1])[None, :]
+             <= jnp.reshape(pos, (-1, 1)))
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", pattn.astype(cache_ckv.dtype), cache_ckv)
+    w_uv = p["v_up"]["w"].value.astype(x.dtype)                    # (r,H,vd)
+    o = jnp.einsum("bhr,rhd->bhd", ctx, w_uv)[:, None]             # (B,1,H,vd)
+    return cm.apply_dense(p["o"], o, in_dims=2), cache_ckv, cache_krope

@@ -1,0 +1,179 @@
+"""Minimal functional module system.
+
+Params are nested dicts whose leaves are :class:`Param` — an array plus a
+tuple of *logical axis names* (one per dim). Sharding rules
+(``repro.distributed.sharding``) map logical axes -> mesh axes, with
+automatic fallback to replication when a dim is not divisible by the
+assigned mesh axes. ``values()`` strips to a plain pytree for compute.
+
+Logical-axis vocabulary used across the model zoo:
+
+  layer   scanned layer-stack dim (never sharded)
+  embed   d_model            vocab  vocabulary
+  heads   attention heads    kv_heads  KV heads      head_dim
+  mlp     d_ff               expert  MoE expert dim
+  q_lora / kv_lora           MLA latent ranks
+  ssm_inner / ssm_state / ssm_heads / conv  Mamba dims
+  batch / seq                activation dims (not params)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Param:
+    value: Any   # jnp.ndarray | ShapeDtypeStruct
+    axes: tuple  # logical axis names, len == value.ndim
+
+    def __repr__(self):
+        return f"Param({getattr(self.value, 'shape', None)}, axes={self.axes})"
+
+
+# Param is a pytree node: `value` is the child, `axes` static metadata. This
+# lets Param trees flow through jit/grad/scan while carrying sharding axes.
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.axes),
+    lambda aux, ch: Param(ch[0], aux),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def values(tree):
+    """Param tree -> plain value pytree."""
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def axes_tree(tree):
+    """Param tree -> pytree of logical-axis tuples (leaves are tuples)."""
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+def zip_params(vals, axes):
+    """Plain value tree + axes tree -> Param tree."""
+    return jax.tree.map(lambda v, a: Param(v, a), vals, axes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def param_count(tree) -> int:
+    vals = values(tree)
+    return sum(int(np.prod(v.shape)) for v in jax.tree.leaves(vals))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def _trunc_normal(key, shape, scale, dtype=jnp.float32):
+    stddev = scale / max(1.0, np.sqrt(shape[0] if len(shape) else 1))
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * stddev
+
+
+def dense(key, d_in, d_out, axes, *, bias=False, bias_axes=None,
+          dtype=jnp.float32, scale=1.0):
+    """Dense layer params. d_in/d_out may be ints or tuples (fused dims)."""
+    d_in_t = d_in if isinstance(d_in, tuple) else (d_in,)
+    d_out_t = d_out if isinstance(d_out, tuple) else (d_out,)
+    shape = d_in_t + d_out_t
+    fan_in = int(np.prod(d_in_t))
+    w = jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * (
+        scale / np.sqrt(fan_in))
+    p = {"w": Param(w, axes)}
+    if bias:
+        if bias_axes is None:
+            bias_axes = axes[len(d_in_t):]
+        p["b"] = Param(jnp.zeros(d_out_t, dtype), bias_axes)
+    return p
+
+
+def apply_dense(p, x, *, in_dims=1, precision=None):
+    """y = x @ w (+ b). Contracts the last `in_dims` dims of x with the first
+    `in_dims` dims of w."""
+    w = p["w"].value if is_param(p["w"]) else p["w"]
+    dn = (tuple(range(x.ndim - in_dims, x.ndim)), tuple(range(in_dims)))
+    y = jax.lax.dot_general(x, w.astype(x.dtype), (dn, ((), ())),
+                            precision=precision)
+    if "b" in p:
+        b = p["b"].value if is_param(p["b"]) else p["b"]
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def embedding(key, vocab, d_model, *, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, d_model), dtype) * 0.02
+    return {"embedding": Param(w, ("vocab", "embed"))}
+
+
+def rmsnorm_init(d, name_axis="embed", dtype=jnp.float32):
+    return {"scale": Param(jnp.ones((d,), dtype), (name_axis,))}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    scale = p["scale"].value if is_param(p["scale"]) else p["scale"]
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer stacking for lax.scan
+# ---------------------------------------------------------------------------
+
+def stack_layers(init_fn: Callable, key, n_layers: int):
+    """vmap `init_fn(key) -> Param tree` over layer keys; prepend 'layer' axis."""
+    proto = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    keys = jax.random.split(key, n_layers)
+    vals = jax.vmap(lambda k: values(init_fn(k)))(keys)
+    return jax.tree.map(
+        lambda p, v: Param(v, ("layer",) + p.axes), proto, vals,
+        is_leaf=is_param)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                     # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    sin = jnp.sin(angles)[..., None, :]              # (..., S, 1, D/2)
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_cross_entropy(logits, labels, mask=None):
+    """logits (..., V) fp32; labels int ids; mask optional {0,1}.
+
+    The label logit is extracted with a one-hot reduction rather than
+    take_along_axis: under GSPMD a gather along a sharded vocab dim would
+    all-gather the logits, while the masked reduction stays sharded and
+    turns into a small all-reduce.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab = logits.shape[-1]
+    onehot = labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,208 @@
+"""Encoder-decoder LM (SeamlessM4T backbone). The audio frontend is a stub:
+the encoder consumes precomputed frame embeddings (B, S_enc, d_model)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import ffn as ffn_mod
+
+
+def _enc_block_init(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": cm.rmsnorm_init(cfg.d_model),
+        "attn": attn.gqa_init(ks[0], cfg),
+        "ffn_norm": cm.rmsnorm_init(cfg.d_model),
+        "ffn": ffn_mod.swiglu_init(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def _dec_block_init(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {
+        "self_norm": cm.rmsnorm_init(cfg.d_model),
+        "self_attn": attn.gqa_init(ks[0], cfg),
+        "cross_norm": cm.rmsnorm_init(cfg.d_model),
+        "cross_attn": attn.gqa_init(ks[1], cfg),
+        "ffn_norm": cm.rmsnorm_init(cfg.d_model),
+        "ffn": ffn_mod.swiglu_init(ks[2], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init(key, cfg):
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": cm.embedding(ks[0], cfg.vocab_size, cfg.d_model),
+        "enc_in_proj": cm.dense(ks[1], cfg.d_model, cfg.d_model,
+                                ("embed", "embed2")),
+        "enc_layers": cm.stack_layers(lambda k: _enc_block_init(k, cfg),
+                                      ks[2], cfg.n_encoder_layers),
+        "enc_norm": cm.rmsnorm_init(cfg.d_model),
+        "dec_layers": cm.stack_layers(lambda k: _dec_block_init(k, cfg),
+                                      ks[3], cfg.n_layers),
+        "final_norm": cm.rmsnorm_init(cfg.d_model),
+        "unembed": cm.dense(ks[4], cfg.d_model, cfg.vocab_size,
+                            ("embed", "vocab")),
+    }
+
+
+def encode(params, cfg, enc_embeds, *, dtype=jnp.bfloat16):
+    x = cm.apply_dense(params["enc_in_proj"], enc_embeds.astype(dtype))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        h = cm.rmsnorm(lp["attn_norm"], x, cfg.rms_eps)
+        a = attn.gqa_forward(lp["attn"], h, cfg, positions=positions,
+                             causal=False)
+        x = x + a
+        h = cm.rmsnorm(lp["ffn_norm"], x, cfg.rms_eps)
+        return x + ffn_mod.swiglu(lp["ffn"], h), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return cm.rmsnorm(params["enc_norm"], x, cfg.rms_eps)
+
+
+def _cross_attend(lp, h, enc_k, enc_v):
+    q = cm.apply_dense(lp["q"], h)   # no rope on cross-attention
+    o = attn.chunked_attention(q, enc_k, enc_v, causal=False)
+    return cm.apply_dense(lp["o"], o, in_dims=2)
+
+
+def forward(params, cfg, tokens, enc_embeds, *, dtype=jnp.bfloat16,
+            remat=False):
+    """Training path. tokens: (B, S_dec); enc_embeds: (B, S_enc, d)."""
+    enc_out = encode(params, cfg, enc_embeds, dtype=dtype)
+    emb = params["embed"]["embedding"].value
+    x = jnp.take(emb, tokens, axis=0).astype(dtype)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(x, lp):
+        h = cm.rmsnorm(lp["self_norm"], x, cfg.rms_eps)
+        x = x + attn.gqa_forward(lp["self_attn"], h, cfg,
+                                 positions=positions)
+        h = cm.rmsnorm(lp["cross_norm"], x, cfg.rms_eps)
+        ek = cm.apply_dense(lp["cross_attn"]["k"], enc_out)
+        ev = cm.apply_dense(lp["cross_attn"]["v"], enc_out)
+        x = x + _cross_attend(lp["cross_attn"], h, ek, ev)
+        h = cm.rmsnorm(lp["ffn_norm"], x, cfg.rms_eps)
+        return x + ffn_mod.swiglu(lp["ffn"], h), None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = cm.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    return cm.apply_dense(params["unembed"], x).astype(jnp.float32)
+
+
+def loss_fn(params, cfg, batch, *, dtype=jnp.bfloat16, remat=True,
+            moe_ctx=None):
+    tokens = batch["tokens"]
+    logits = forward(params, cfg, tokens, batch["enc_embeds"], dtype=dtype,
+                     remat=remat)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:], jnp.float32),
+         jnp.zeros_like(tokens[:, :1], jnp.float32)], axis=1)
+    return cm.softmax_cross_entropy(logits, labels, mask)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int,
+               dtype=jnp.bfloat16):
+    L, kv, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    self_axes = ("layer", "batch", "kv_seq", "kv_heads", "head_dim")
+    cross_axes = ("layer", "batch", "enc_seq", "kv_heads", "head_dim")
+    return {
+        "k": cm.Param(jnp.zeros((L, batch, max_len, kv, hd), dtype), self_axes),
+        "v": cm.Param(jnp.zeros((L, batch, max_len, kv, hd), dtype), self_axes),
+        "ek": cm.Param(jnp.zeros((L, batch, enc_len, kv, hd), dtype), cross_axes),
+        "ev": cm.Param(jnp.zeros((L, batch, enc_len, kv, hd), dtype), cross_axes),
+        "pos": cm.Param(jnp.zeros((), jnp.int32), ()),
+    }
+
+
+def prefill(params, cfg, tokens, enc_embeds, *, max_len=None,
+            dtype=jnp.bfloat16):
+    """Encode + run decoder over `tokens`, capturing self and cross KV."""
+    enc_out = encode(params, cfg, enc_embeds, dtype=dtype)
+    emb = params["embed"]["embedding"].value
+    x = jnp.take(emb, tokens, axis=0).astype(dtype)
+    b, seq = tokens.shape
+    max_len = max_len or seq
+    positions = jnp.arange(seq)[None, :]
+
+    def body(x, lp):
+        h = cm.rmsnorm(lp["self_norm"], x, cfg.rms_eps)
+        q, k, v = attn.gqa_project_qkv(lp["self_attn"], h, positions,
+                                       cfg.rope_theta)
+        o = attn.chunked_attention(q, k, v, causal=True)
+        x = x + cm.apply_dense(lp["self_attn"]["o"], o, in_dims=2)
+        h = cm.rmsnorm(lp["cross_norm"], x, cfg.rms_eps)
+        ek = cm.apply_dense(lp["cross_attn"]["k"], enc_out)
+        ev = cm.apply_dense(lp["cross_attn"]["v"], enc_out)
+        x = x + _cross_attend(lp["cross_attn"], h, ek, ev)
+        h = cm.rmsnorm(lp["ffn_norm"], x, cfg.rms_eps)
+        x = x + ffn_mod.swiglu(lp["ffn"], h)
+        caches = {
+            "k": _pad_to(k, max_len).astype(dtype),
+            "v": _pad_to(v, max_len).astype(dtype),
+            "ek": ek.astype(dtype), "ev": ev.astype(dtype),
+        }
+        return x, caches
+
+    x, cache_stk = jax.lax.scan(body, x, params["dec_layers"])
+    x = cm.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    logits = cm.apply_dense(params["unembed"], x[:, -1:]).astype(jnp.float32)
+    axes = {
+        "k": ("layer", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("layer", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "ek": ("layer", "batch", "enc_seq", "kv_heads", "head_dim"),
+        "ev": ("layer", "batch", "enc_seq", "kv_heads", "head_dim"),
+    }
+    cache = {k: cm.Param(v, axes[k]) for k, v in cache_stk.items()}
+    cache["pos"] = cm.Param(jnp.asarray(min(seq, max_len), jnp.int32), ())
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, token, *, dtype=jnp.bfloat16):
+    pos = cache["pos"].value
+    emb = params["embed"]["embedding"].value
+    x = jnp.take(emb, token, axis=0).astype(dtype)
+    cache_vals = {k: v.value for k, v in cache.items() if k != "pos"}
+
+    def body(x, layer_in):
+        lp, cl = layer_in
+        h = cm.rmsnorm(lp["self_norm"], x, cfg.rms_eps)
+        a, ck, cv = attn.gqa_decode(lp["self_attn"], h, cl["k"], cl["v"],
+                                    pos, cfg)
+        x = x + a
+        h = cm.rmsnorm(lp["cross_norm"], x, cfg.rms_eps)
+        q = cm.apply_dense(lp["cross_attn"]["q"], h)
+        o = attn.decode_attention(q, cl["ek"], cl["ev"], cl["ek"].shape[1])
+        x = x + cm.apply_dense(lp["cross_attn"]["o"], o, in_dims=2)
+        h = cm.rmsnorm(lp["ffn_norm"], x, cfg.rms_eps)
+        x = x + ffn_mod.swiglu(lp["ffn"], h)
+        return x, {"k": ck, "v": cv, "ek": cl["ek"], "ev": cl["ev"]}
+
+    x, new_vals = jax.lax.scan(body, x, (params["dec_layers"], cache_vals))
+    x = cm.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    logits = cm.apply_dense(params["unembed"], x).astype(jnp.float32)
+    new_cache = {k: cm.Param(v, cache[k].axes) for k, v in new_vals.items()}
+    new_cache["pos"] = cm.Param(pos + 1, ())
+    return logits, new_cache
+
+
+def _pad_to(x, n):
+    if x.shape[1] == n:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[1] = (0, n - x.shape[1])
+    return jnp.pad(x, pad)

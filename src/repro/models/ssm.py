@@ -1,0 +1,207 @@
+"""Mamba2 SSD (state-space duality) mixer. [arXiv:2405.21060]
+
+Train/prefill use the chunked dual form (quadratic within a chunk, linear
+recurrence across chunks) — implemented here in pure jnp with a lax.scan over
+chunks; ``repro.kernels.ssd_scan`` is the Pallas TPU version of the same
+schedule and ``repro.kernels.ref.ssd_ref`` is the naive-recurrence oracle both
+are tested against. Decode is a single recurrent state update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def mamba2_init(key, cfg):
+    s = cfg.ssm
+    d_inner, nh, conv_ch = dims(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "z_proj": cm.dense(ks[0], cfg.d_model, d_inner, ("embed", "ssm_inner")),
+        "xbc_proj": cm.dense(ks[1], cfg.d_model, conv_ch, ("embed", "ssm_conv_ch")),
+        "dt_proj": cm.dense(ks[2], cfg.d_model, nh, ("embed", "ssm_heads")),
+        "out_proj": cm.dense(ks[3], d_inner, cfg.d_model, ("ssm_inner", "embed")),
+        "conv_w": cm.Param(
+            jax.random.normal(ks[4], (s.conv_width, conv_ch)) * 0.1,
+            ("conv", "ssm_conv_ch")),
+        "dt_bias": cm.Param(jnp.zeros((nh,)), ("ssm_heads",)),
+        "A_log": cm.Param(jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+                          ("ssm_heads",)),
+        "D": cm.Param(jnp.ones((nh,)), ("ssm_heads",)),
+        "norm": cm.rmsnorm_init(d_inner, "ssm_inner"),
+    }
+    return p
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C)."""
+    wdt = w.astype(x.dtype)
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + pad[:, i:i + x.shape[1]] * wdt[i]
+    return out
+
+
+def ssd_chunked(dx, dA, B, C, chunk, initial_state=None):
+    """Chunked SSD. All fp32 math on the state path.
+
+    dx: (B, S, H, P) inputs pre-multiplied by dt
+    dA: (B, S, H)    per-step log-decay (dt * A, negative)
+    B, C: (B, S, G, N) input/output projections (G groups broadcast to H)
+    Returns y (B, S, H, P), final_state (B, H, N, P).
+    """
+    b, s, h, p = dx.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    nc = s // chunk
+    f32 = jnp.float32
+
+    dxc = dx.reshape(b, nc, chunk, h, p)
+    dAc = dA.reshape(b, nc, chunk, h).astype(f32)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, n, p), f32)
+
+    def step(state, inp):
+        dx_i, dA_i, B_i, C_i = inp          # (b,chunk,...)
+        cs = jnp.cumsum(dA_i, axis=1)       # (b,L,h) inclusive
+        # intra-chunk scores: (b, L, L, g)
+        scores = jnp.einsum("blgn,bsgn->blsg", Cc_ast(C_i), Cc_ast(B_i))
+        # decay factor exp(cs_l - cs_s) for l >= s  -> (b, L, L, h).
+        # mask BEFORE exp: the upper triangle has delta >> 0 whose exp
+        # overflows to inf and poisons gradients through the where.
+        delta = cs[:, :, None, :] - cs[:, None, :, :]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.exp(jnp.where(causal[None, :, :, None], delta, -1e30))
+        scores_h = jnp.repeat(scores, hg, axis=-1) if g > 1 else (
+            jnp.broadcast_to(scores, scores.shape[:3] + (h,)))
+        m = scores_h * decay                # (b, L, L, h)
+        y_diag = jnp.einsum("blsh,bshp->blhp", m, dx_i.astype(f32))
+        # contribution of incoming state: decay from chunk start
+        dec0 = jnp.exp(cs)                  # (b, L, h)
+        C_h = _group_to_heads(C_i, h)       # (b, L, h, n)
+        y_off = jnp.einsum("blhn,bhnp->blhp", C_h * dec0[..., None], state)
+        # new state: state * total-decay + sum_s B_s x_s decayed to chunk end
+        dec_end = jnp.exp(cs[:, -1:, :] - cs)          # (b, L, h)
+        B_h = _group_to_heads(B_i, h)
+        state_new = jnp.einsum("blhn,blhp->bhnp",
+                               B_h * dec_end[..., None], dx_i.astype(f32))
+        state = state * jnp.exp(cs[:, -1])[:, :, None, None] + state_new
+        return state, (y_diag + y_off)
+
+    def Cc_ast(x):
+        return x.astype(f32)
+
+    xs = (jnp.moveaxis(dxc, 1, 0), jnp.moveaxis(dAc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0))
+    final_state, ys = jax.lax.scan(step, initial_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+    return y.astype(dx.dtype), final_state
+
+
+def _group_to_heads(x, h):
+    """(b, L, g, n) -> (b, L, h, n) by repeating each group h//g times."""
+    b, l, g, n = x.shape
+    if g == h:
+        return x.astype(jnp.float32)
+    return jnp.repeat(x.astype(jnp.float32), h // g, axis=2)
+
+
+def mamba2_forward(p, x, cfg, *, return_state=False, initial_state=None,
+                   conv_init=None):
+    """x: (B, S, d_model) -> (B, S, d_model) [+ (ssm_state, conv_buffer)]."""
+    s = cfg.ssm
+    d_inner, nh, conv_ch = dims(cfg)
+    b, seq, _ = x.shape
+
+    z = cm.apply_dense(p["z_proj"], x)                       # (B,S,di)
+    xbc = cm.apply_dense(p["xbc_proj"], x)                   # (B,S,cc)
+    if conv_init is not None:
+        xbc_ext = jnp.concatenate([conv_init.astype(xbc.dtype), xbc], axis=1)
+        conv = _causal_conv(xbc_ext, p["conv_w"].value)[:, conv_init.shape[1]:]
+    else:
+        conv = _causal_conv(xbc, p["conv_w"].value)
+    conv = jax.nn.silu(conv)
+    xin = conv[..., :d_inner]
+    Bmat = conv[..., d_inner:d_inner + s.n_groups * s.d_state]
+    Cmat = conv[..., d_inner + s.n_groups * s.d_state:]
+    Bmat = Bmat.reshape(b, seq, s.n_groups, s.d_state)
+    Cmat = Cmat.reshape(b, seq, s.n_groups, s.d_state)
+
+    dt = jax.nn.softplus(
+        cm.apply_dense(p["dt_proj"], x).astype(jnp.float32)
+        + p["dt_bias"].value)                                # (B,S,H)
+    A = -jnp.exp(p["A_log"].value)                           # (H,)
+    dA = dt * A                                              # log decay
+    xh = xin.reshape(b, seq, nh, s.head_dim)
+    dx = xh * dt[..., None].astype(xh.dtype)
+
+    chunk = min(s.chunk_size, seq)
+    while seq % chunk:
+        chunk //= 2
+    y, state = ssd_chunked(dx, dA, Bmat, Cmat, chunk,
+                           initial_state=initial_state)
+    y = y + xh * p["D"].value[None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, seq, d_inner)
+    y = cm.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.rms_eps)
+    out = cm.apply_dense(p["out_proj"], y)
+    if return_state:
+        width = s.conv_width
+        conv_buf = xbc[:, -(width - 1):] if seq >= width - 1 else jnp.pad(
+            xbc, ((0, 0), (width - 1 - seq, 0), (0, 0)))
+        return out, (state, conv_buf)
+    return out
+
+
+def mamba2_decode(p, x, state, conv_buf, cfg):
+    """One-token step. x: (B, 1, d_model); state (B,H,N,P) fp32;
+    conv_buf (B, W-1, conv_ch). Returns (y, state, conv_buf)."""
+    s = cfg.ssm
+    d_inner, nh, conv_ch = dims(cfg)
+    b = x.shape[0]
+
+    z = cm.apply_dense(p["z_proj"], x)[:, 0]                 # (B,di)
+    xbc = cm.apply_dense(p["xbc_proj"], x)[:, 0]             # (B,cc)
+    window = jnp.concatenate([conv_buf, xbc[:, None]], axis=1)  # (B,W,cc)
+    w = p["conv_w"].value.astype(xbc.dtype)                  # (W,cc)
+    conv = jnp.einsum("bwc,wc->bc", window, w)
+    conv = jax.nn.silu(conv)
+    new_buf = window[:, 1:]
+
+    xin = conv[:, :d_inner]
+    Bmat = conv[:, d_inner:d_inner + s.n_groups * s.d_state].reshape(
+        b, s.n_groups, s.d_state)
+    Cmat = conv[:, d_inner + s.n_groups * s.d_state:].reshape(
+        b, s.n_groups, s.d_state)
+
+    dt = jax.nn.softplus(
+        cm.apply_dense(p["dt_proj"], x)[:, 0].astype(jnp.float32)
+        + p["dt_bias"].value)                                # (B,H)
+    A = -jnp.exp(p["A_log"].value)
+    da = jnp.exp(dt * A)                                     # (B,H)
+    xh = xin.reshape(b, nh, s.head_dim).astype(jnp.float32)
+    B_h = _group_to_heads(Bmat[:, None], nh)[:, 0]           # (B,H,N)
+    C_h = _group_to_heads(Cmat[:, None], nh)[:, 0]
+    # state <- decay * state + dt * B ⊗ x
+    upd = jnp.einsum("bhn,bhp->bhnp", B_h, xh * dt[..., None])
+    state = state * da[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", C_h, state)              # (B,H,P)
+    y = y + xh * p["D"].value[None, :, None]
+    y = y.reshape(b, d_inner).astype(x.dtype)
+    y = cm.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.rms_eps)
+    out = cm.apply_dense(p["out_proj"], y)[:, None]          # (B,1,d_model)
+    return out, state, new_buf

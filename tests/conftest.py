@@ -1,0 +1,45 @@
+import os
+import sys
+
+# tests must see 1 CPU device (the dry-run sets 512 for itself only)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def movie():
+    from repro.data import load_dataset
+    return load_dataset("movie")
+
+
+@pytest.fixture(scope="session")
+def estate():
+    from repro.data import load_dataset
+    return load_dataset("estate")
+
+
+@pytest.fixture(scope="session")
+def game_small():
+    from repro.data import load_dataset
+    return load_dataset("game", max_rows=400)
+
+
+def perfect_backends(oracle):
+    """Single-tier oracle cascade: capability > 1 => always correct."""
+    from repro.core.backends import SimulatedBackend
+    from repro.core.cost import TierSpec
+    spec = TierSpec("m*", 1.01, 0.0, 0.0, 0.0, 0.0)
+    return {"m*": SimulatedBackend(spec, oracle, violation_rate=0.0)}
+
+
+@pytest.fixture(scope="session")
+def tiny_bundle():
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.models import registry
+    cfg = reduced(get_config("qwen2-0.5b"))
+    b = registry.build(cfg)
+    params = b.init(jax.random.PRNGKey(0))
+    return cfg, b, params

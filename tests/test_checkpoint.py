@@ -1,0 +1,120 @@
+"""Checkpointing: atomicity, integrity, GC, async, restart, elastic."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ck
+from repro.models import common as cm
+
+
+def tiny_state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {
+            "w": cm.Param(jax.random.normal(k, (8, 16)), ("embed", "mlp")),
+            "b": cm.Param(jnp.zeros((16,)), ("mlp",)),
+        },
+        "opt": {"step": cm.Param(jnp.asarray(7, jnp.int32), ())},
+    }
+
+
+def assert_state_equal(a, b):
+    la = jax.tree.leaves(a, is_leaf=cm.is_param)
+    lb = jax.tree.leaves(b, is_leaf=cm.is_param)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x.value),
+                                      np.asarray(y.value))
+        assert x.axes == y.axes
+
+
+def test_save_restore_roundtrip(tmp_path):
+    s = tiny_state()
+    ck.save(str(tmp_path), 3, s)
+    step, got = ck.restore(str(tmp_path))
+    assert step == 3
+    assert_state_equal(s, got)
+
+
+def test_atomicity_tmp_dirs_invisible(tmp_path):
+    s = tiny_state()
+    ck.save(str(tmp_path), 1, s)
+    # simulate a crashed writer: uncommitted tmp dir with higher step
+    bad = tmp_path / "step_00000009.tmp-dead"
+    bad.mkdir()
+    (bad / "manifest.json").write_text("{}")
+    assert ck.latest_step(str(tmp_path)) == 1
+    step, _ = ck.restore(str(tmp_path))
+    assert step == 1
+
+
+def test_keep_last_k_gc(tmp_path):
+    s = tiny_state()
+    for i in range(6):
+        ck.save(str(tmp_path), i, s, keep_last=2)
+    assert ck.committed_steps(str(tmp_path)) == [4, 5]
+
+
+def test_checksum_detects_corruption(tmp_path):
+    s = tiny_state()
+    d = ck.save(str(tmp_path), 2, s)
+    # flip bytes in one leaf
+    leaf = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    p = os.path.join(d, leaf)
+    raw = bytearray(open(p, "rb").read())
+    raw[-1] ^= 0xFF
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(IOError):
+        ck.restore(str(tmp_path))
+    step, _ = ck.restore(str(tmp_path), verify=False)
+    assert step == 2
+
+
+def test_async_checkpointer(tmp_path):
+    s = tiny_state()
+    ac = ck.AsyncCheckpointer(str(tmp_path), keep_last=2)
+    for i in range(4):
+        ac.save(i, s)
+    ac.close()
+    assert ck.committed_steps(str(tmp_path)) == [2, 3]
+    _, got = ck.restore(str(tmp_path))
+    assert_state_equal(s, got)
+
+
+def test_restore_with_mesh_resharding(tmp_path):
+    """Elastic path: restore onto a (1,1) mesh with sharding rules."""
+    from repro.distributed import sharding as shd
+    s = tiny_state()
+    ck.save(str(tmp_path), 0, s)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = {"embed": "data", "mlp": "model"}
+    step, got = ck.restore(str(tmp_path), mesh=mesh, rules=rules)
+    assert_state_equal(s, got)
+    w = got["params"]["w"].value
+    assert w.sharding.mesh.shape == {"data": 1, "model": 1}
+
+
+def test_plan_remesh_factorings():
+    from repro.distributed.elastic import plan_remesh
+    assert plan_remesh(512) == (32, 16)
+    assert plan_remesh(256) == (16, 16)
+    assert plan_remesh(48) == (3, 16)
+    assert plan_remesh(24) == (3, 8)
+    assert plan_remesh(512, model_parallel=8) == (64, 8)
+    with pytest.raises(ValueError):
+        plan_remesh(10, model_parallel=4)
+
+
+def test_manifest_contents(tmp_path):
+    s = tiny_state()
+    d = ck.save(str(tmp_path), 5, s, extra_meta={"mesh": "2x16x16"})
+    m = json.load(open(os.path.join(d, "manifest.json")))
+    assert m["step"] == 5
+    assert m["meta"]["mesh"] == "2x16x16"
+    assert m["leaves"]["params/w"]["axes"] == ["embed", "mlp"]
+    assert m["leaves"]["params/w"]["shape"] == [8, 16]

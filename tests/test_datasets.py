@@ -1,0 +1,88 @@
+"""Datasets: Table-3 fidelity + full oracle coverage of every workload."""
+import pytest
+
+from repro.core import executor as ex
+from repro.core import plan as P
+from repro.data import DATASETS, WORKLOADS, load_dataset
+
+from conftest import perfect_backends
+
+TABLE3 = {"movie": (250, 22), "estate": (1041, 4), "game": (18891, 21)}
+
+
+@pytest.mark.parametrize("name", DATASETS)
+def test_table3_row_and_attr_counts(name):
+    table, _ = load_dataset(name)
+    rows, attrs = TABLE3[name]
+    assert table.n_rows == rows
+    assert len(table.columns) == attrs
+
+
+def test_modalities_match_paper():
+    movie, _ = load_dataset("movie")
+    assert movie.modalities["Poster"] == "image"
+    assert movie.modalities["IMDB_rating"] == "numeric"
+    estate, _ = load_dataset("estate")
+    assert estate.modalities["image"] == "image"
+    game, _ = load_dataset("game")
+    assert game.modalities["rating"] == "image"
+    assert game.modalities["release_date"] == "date"
+
+
+def test_image_handles_resolve_to_blobs():
+    movie, _ = load_dataset("movie")
+    vals = movie.resolve("Poster")
+    assert isinstance(vals[0], dict) and "cast" in vals[0]
+
+
+def test_generation_is_deterministic():
+    a, _ = load_dataset("movie")
+    from repro.data import movie as movie_mod
+    b = movie_mod.generate()
+    assert a.columns["Title"] == b.columns["Title"]
+
+
+@pytest.mark.parametrize("name", DATASETS)
+def test_oracle_covers_every_workload_instruction(name):
+    """Every operator of every query must be answerable by the oracle —
+    executing the full workload with a perfect backend must not raise."""
+    rows = 60 if name != "game" else 120
+    table, oracle = load_dataset(name, max_rows=rows)
+    backends = perfect_backends(oracle)
+    for q in WORKLOADS[name]:
+        plan = q.plan_for(table)
+        plan.validate()
+        res = ex.execute(plan, table, backends, default_tier="m*")
+        assert res.value() is not None, (name, q.qid)
+
+
+@pytest.mark.parametrize("name", DATASETS)
+def test_workload_size_classes(name):
+    sizes = {"S": (1, 1), "M": (2, 3), "L": (4, 99)}
+    for q in WORKLOADS[name]:
+        lo, hi = sizes[q.size]
+        n = len(q.plan_for(load_dataset(name, max_rows=4)[0]).ops)
+        assert lo <= n <= hi, (name, q.qid, n)
+
+
+def test_selective_queries_select_nontrivially():
+    """Filters should neither keep everything nor drop everything."""
+    table, oracle = load_dataset("movie")
+    backends = perfect_backends(oracle)
+    for qi in (1, 2, 3):
+        plan = WORKLOADS["movie"][qi].plan_for(table)
+        res = ex.execute(plan, table, backends, default_tier="m*")
+        assert 0 < res.table.n_rows < table.n_rows
+
+
+def test_table_select_take_with_column():
+    table, _ = load_dataset("movie", max_rows=10)
+    sel = table.select([i % 2 == 0 for i in range(10)])
+    assert sel.n_rows == 5
+    t2 = table.with_column("X", list(range(10)), "numeric")
+    assert t2.column("X") == list(range(10))
+    with pytest.raises(ValueError):
+        table.with_column("Y", [1, 2])
+    s = table.sample(4, seed=1)
+    assert s.n_rows == 4
+    assert table.sample(4, seed=1).columns == s.columns

@@ -1,0 +1,159 @@
+"""Executor (caching, batching, accounting) + judge behaviour + cost model."""
+import pytest
+
+from repro.core import backends as bk
+from repro.core import cost as cost_mod
+from repro.core import executor as ex
+from repro.core import judge as judge_mod
+from repro.core import plan as P
+from repro.core.table import Table
+from repro.data import WORKLOADS, load_dataset
+
+from conftest import perfect_backends
+
+
+@pytest.fixture(scope="module")
+def movie_small():
+    return load_dataset("movie", max_rows=50)
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+def test_execute_matches_udf_semantics(movie_small):
+    table, oracle = movie_small
+    backends = perfect_backends(oracle)
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 8.", "IMDB_rating"),
+        P.Operator(P.REDUCE, "Count the number of movies.", "Title"),
+    ))
+    got = ex.execute(plan, table, backends, default_tier="m*").value()
+    want = sum(1 for r in table.column("IMDB_rating") if float(r) > 8)
+    assert got == want
+
+
+def test_output_cache_avoids_recalls(movie_small):
+    table, oracle = movie_small
+    backends = bk.make_backends(oracle)
+    plan = WORKLOADS["movie"][1].plan_for(table)
+    cache = ex.OutputCache()
+    m1 = bk.UsageMeter()
+    ex.execute(plan, table, backends, cache=cache, meter=m1)
+    first_calls = m1.total.calls
+    m2 = bk.UsageMeter()
+    r2 = ex.execute(plan, table, backends, cache=cache, meter=m2)
+    assert m2.total.calls < first_calls / 10
+    assert r2.wall_s == 0.0
+    assert cache.hits >= table.n_rows
+
+
+def test_empty_table_short_circuits(movie_small):
+    _, oracle = movie_small
+    backends = perfect_backends(oracle)
+    empty = Table({"A": [], "B": []}, name="t")
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 8.", "A"),
+        P.Operator(P.REDUCE, "Count the number of movies.", "B"),
+    ))
+    res = ex.execute(plan, empty, backends, default_tier="m*")
+    assert res.value() == 0
+
+
+def test_batch_prompting_reduces_calls_and_quality(movie_small):
+    table, oracle = movie_small
+    backends = bk.make_backends(oracle)
+    op = P.Operator(P.FILTER, "The movie is directed by Christopher "
+                    "Nolan.", "Director")
+    plan = P.LogicalPlan((op,))
+    m_b1 = bk.UsageMeter()
+    r1 = ex.execute(plan, table, backends, meter=m_b1, batch_size=1)
+    m_b4 = bk.UsageMeter()
+    r4 = ex.execute(plan, table, backends, meter=m_b4, batch_size=4)
+    assert m_b4.total.calls < m_b1.total.calls
+    assert m_b4.total.usd < m_b1.total.usd
+
+
+def test_makespan_concurrency():
+    assert ex._makespan(16.0, 16, 16) == pytest.approx(1.0)
+    assert ex._makespan(16.0, 16, 4) == pytest.approx(4.0)
+    assert ex._makespan(16.0, 16, 1) == pytest.approx(16.0)
+
+
+# ---------------------------------------------------------------------------
+# Judge
+# ---------------------------------------------------------------------------
+
+def test_judge_rates_identical_plans_1(movie_small):
+    table, oracle = movie_small
+    backends = perfect_backends(oracle)
+    plan = WORKLOADS["movie"][9].plan_for(table)
+    j = judge_mod.Judge(backends, exec_tier="m*")
+    r = j.rate(plan, plan, table.sample(12))
+    assert r.rating == pytest.approx(1.0)
+
+
+def test_judge_rates_negated_filter_lower(movie_small):
+    table, oracle = movie_small
+    backends = perfect_backends(oracle)
+    plan = WORKLOADS["movie"][1].plan_for(table)     # Nolan filter
+    bad = plan.replace_op(0, plan.ops[0].with_(
+        instruction="It is NOT the case that: " + plan.ops[0].instruction))
+    j = judge_mod.Judge(backends, exec_tier="m*")
+    r = j.rate(plan, bad, table.sample(16))
+    assert r.rating < 0.3
+
+
+def test_judge_mismatched_result_kind_is_zero(movie_small):
+    table, oracle = movie_small
+    backends = perfect_backends(oracle)
+    plan = WORKLOADS["movie"][5].plan_for(table)     # filter + count
+    dropped = P.LogicalPlan(plan.ops[:-1], plan.source)
+    j = judge_mod.Judge(backends, exec_tier="m*")
+    assert j.rate(plan, dropped, table.sample(12)).rating == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def test_plan_cost_selectivity_flow():
+    ops = (P.Operator(P.MAP, "m", "a", "b"),
+           P.Operator(P.FILTER, "f", "b"),
+           P.Operator(P.MAP, "m2", "b", "c"))
+    pc = cost_mod.plan_cost(P.LogicalPlan(ops), 1000)
+    # second map sees half the rows
+    assert pc.per_op[2].rows_in == pytest.approx(500)
+    assert pc.per_op[0].llm_calls == 1000
+
+
+def test_fused_filter_cheaper_than_two():
+    two = P.LogicalPlan((P.Operator(P.FILTER, "a", "c"),
+                         P.Operator(P.FILTER, "b", "c")))
+    one = P.LogicalPlan((P.Operator(P.FILTER, "a and b", "c",
+                                    fused_from=2),))
+    assert cost_mod.plan_cost(one, 1000).cost \
+        < cost_mod.plan_cost(two, 1000).cost
+
+
+def test_pushdown_cheaper_when_filter_first():
+    late = P.LogicalPlan((P.Operator(P.MAP, "m", "a", "b"),
+                          P.Operator(P.FILTER, "f", "a")))
+    early = late.move_op(1, 0)
+    assert cost_mod.plan_cost(early, 1000).cost \
+        < cost_mod.plan_cost(late, 1000).cost
+
+
+def test_udf_ops_cost_nothing():
+    p = P.LogicalPlan((P.Operator(P.FILTER, "f", "c",
+                                  udf="lambda x: True"),))
+    pc = cost_mod.plan_cost(p, 10000)
+    assert pc.usd == 0.0 and pc.llm_calls == 0
+
+
+def test_tier_price_ordering():
+    tiers = cost_mod.tier_list()
+    for a, b in zip(tiers, tiers[1:]):
+        assert a.capability < b.capability
+        assert a.usd(1e6, 1e6) < b.usd(1e6, 1e6)
+        assert a.latency(100) < b.latency(100)

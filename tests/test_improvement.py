@@ -1,0 +1,182 @@
+"""Improvement-score estimators (Eqs. 2-8): algebraic identities as
+property tests over arbitrary joint output distributions.
+
+The estimators consume only model *outputs*, so we drive them with a
+scripted backend whose outputs per (tier, record) come from
+hypothesis-generated response patterns. Invariants:
+
+  * pushdown == exact  ALWAYS (Eq. 3 is a pure conditional factorization)
+  * reuse    == exact  under the binary response model (one canonical wrong
+                       answer per record — the paper's Fig. 5 world)
+  * approx   == exact  when Hypothesis 2 holds (nested correctness)
+  * m*-invocation counts: approx <= reuse <= pushdown <= exact
+"""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import backends as bk
+from repro.core import cost as cost_mod
+from repro.core import improvement as imp
+from repro.core import plan as P
+
+OP = P.Operator(P.FILTER, "test predicate", "col")
+TIERS = ("m1", "m2", "m3", "m*")
+
+
+@dataclasses.dataclass
+class ScriptedBackend:
+    """Outputs fixed per (tier, record index): outputs[tier][i]."""
+    tier: cost_mod.TierSpec
+    outputs: dict
+
+    def run_values(self, op, values, meter=None, batch_size=1):
+        outs = [self.outputs[self.tier.name][int(v)] for v in values]
+        if meter:
+            meter.record(self.tier.name,
+                         bk.Usage(calls=len(values), tok_in=len(values),
+                                  tok_out=len(values), usd=0.0,
+                                  latency_s=0.0))
+        return outs
+
+
+def make_backends(outputs):
+    return {t: ScriptedBackend(cost_mod.DEFAULT_TIERS[t], outputs)
+            for t in TIERS}
+
+
+def run_all(outputs):
+    n = len(outputs["m1"])
+    values = list(range(n))
+    res = {}
+    for method in imp.ESTIMATORS:
+        backends = make_backends(outputs)
+        res[method] = imp.improvement_scores(backends, OP, values,
+                                             method=method)
+    return res
+
+
+# --------------------------------------------------------------------------
+# binary response model: each record has a truth and ONE wrong answer;
+# tiers either emit the truth or the wrong answer
+# --------------------------------------------------------------------------
+
+@st.composite
+def binary_response_patterns(draw):
+    n = draw(st.integers(2, 24))
+    # per record: which tiers are correct (m* always correct => proxy truth)
+    pats = []
+    for i in range(n):
+        correct = {t: draw(st.booleans()) for t in ("m1", "m2", "m3")}
+        correct["m*"] = True
+        pats.append(correct)
+    outputs = {t: [] for t in TIERS}
+    for i, correct in enumerate(pats):
+        for t in TIERS:
+            outputs[t].append(bool(i % 2) if correct[t]
+                              else (not bool(i % 2)))
+    return outputs
+
+
+@st.composite
+def nested_patterns(draw):
+    """Hypothesis-2 world: correctness sets nested m1 ⊆ m2 ⊆ m3 ⊆ m*."""
+    n = draw(st.integers(2, 24))
+    outputs = {t: [] for t in TIERS}
+    for i in range(n):
+        # strength threshold: tiers >= k are correct
+        k = draw(st.integers(0, 3))
+        for j, t in enumerate(TIERS):
+            correct = j >= k
+            outputs[t].append(bool(i % 2) if correct else (not bool(i % 2)))
+    return outputs
+
+
+@settings(max_examples=60, deadline=None)
+@given(binary_response_patterns())
+def test_pushdown_equals_exact_always(outputs):
+    res = run_all(outputs)
+    for tier in ("m2", "m3", "m*"):
+        assert res["pushdown"].scores[tier] == pytest.approx(
+            res["exact"].scores[tier], abs=1e-12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(nested_patterns())
+def test_reuse_equals_exact_under_hypothesis2(outputs):
+    """Eq. 4's substitution Pr(m2=m*, m1!=m2, m2=m3) = I12 needs nested
+    correctness (m2 right => m3 right), NOT just the binary response model.
+    The paper presents Eq. 4 as a pure total-probability identity; property
+    testing pins the actual assumption boundary (EXPERIMENTS.md
+    §Repro-validation)."""
+    res = run_all(outputs)
+    for tier in ("m2", "m3", "m*"):
+        assert res["reuse"].scores[tier] == pytest.approx(
+            res["exact"].scores[tier], abs=1e-12)
+
+
+def test_reuse_deviates_without_hypothesis2():
+    """Regression: the hypothesis-found counterexample where m2 is right
+    but m3 is wrong (violating nesting) makes Eq. 4 underestimate I13."""
+    outputs = {"m1": [True, False], "m2": [False, False],
+               "m3": [True, False], "m*": [False, True]}
+    res = run_all(outputs)
+    assert res["reuse"].scores["m3"] != pytest.approx(
+        res["exact"].scores["m3"], abs=1e-12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(nested_patterns())
+def test_approx_equals_exact_under_hypothesis2(outputs):
+    res = run_all(outputs)
+    for tier in ("m2", "m3", "m*"):
+        assert res["approx"].scores[tier] == pytest.approx(
+            res["exact"].scores[tier], abs=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(nested_patterns())
+def test_mstar_invocation_ordering(outputs):
+    n = len(outputs["m1"])
+    values = list(range(n))
+    calls = {}
+    for method in ("exact", "pushdown", "reuse", "approx"):
+        backends = make_backends(outputs)
+        r = imp.improvement_scores(backends, OP, values, method=method)
+        calls[method] = r.meter.calls("m*")
+    assert calls["approx"] <= calls["reuse"] <= calls["pushdown"] \
+        <= calls["exact"]
+    assert calls["exact"] == n
+
+
+def test_scores_bounded_01():
+    outputs = {t: [True] * 8 for t in TIERS}
+    for method, res in run_all(outputs).items():
+        for tier, s in res.scores.items():
+            assert 0.0 <= s <= 1.0, (method, tier, s)
+
+
+def test_all_agree_means_zero_improvement():
+    outputs = {t: ["same"] * 10 for t in TIERS}
+    res = run_all(outputs)
+    for method in res:
+        assert res[method].scores["m2"] == 0.0
+        assert res[method].scores["m3"] == 0.0
+        assert res[method].scores["m*"] == 0.0
+
+
+def test_simulated_backend_estimators_close():
+    """End-to-end: with the calibrated simulator (violations on), approx
+    stays within sampling tolerance of exact."""
+    from repro.core.backends import make_backends as mk
+    from repro.core.backends import UDFOracle
+    op = P.Operator(P.FILTER, "The rating is higher than 5.", "col")
+    values = [str(v / 10.0) for v in range(200)]
+    backends = mk(UDFOracle(), violation_rate=0.03)
+    exact = imp.improvement_scores(backends, op, values, method="exact")
+    backends = mk(UDFOracle(), violation_rate=0.03)
+    approx = imp.improvement_scores(backends, op, values, method="approx")
+    for tier in ("m2", "m3", "m*"):
+        assert approx.scores[tier] == pytest.approx(
+            exact.scores[tier], abs=0.08)

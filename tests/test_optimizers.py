@@ -1,0 +1,190 @@
+"""Logical (Alg. 1) + physical (Alg. 2) optimizers."""
+import random
+
+import pytest
+
+from repro.core import backends as bk
+from repro.core import executor as ex
+from repro.core import logical_optimizer as lopt
+from repro.core import physical_optimizer as popt
+from repro.core import plan as P
+from repro.core import rewriter as rw
+from repro.core.cost import DEFAULT_TIERS
+from repro.data import WORKLOADS, load_dataset
+
+from conftest import perfect_backends
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1 sampling
+# ---------------------------------------------------------------------------
+
+def test_eq1_probabilities_form_distribution():
+    for lam in (0.0, 0.2, 1.0):
+        probs = lopt.sample_probabilities([1.0, 2.0, 10.0], lam)
+        assert sum(probs) == pytest.approx(1.0)
+        assert all(p > 0 for p in probs)
+
+
+def test_eq1_prefers_cheap_plans():
+    probs = lopt.sample_probabilities([0.1, 10.0], lam=0.2)
+    assert probs[0] > probs[1]
+
+
+def test_eq1_lambda_one_is_uniform():
+    probs = lopt.sample_probabilities([0.1, 10.0, 5.0], lam=1.0)
+    assert probs == pytest.approx([1 / 3] * 3)
+
+
+# ---------------------------------------------------------------------------
+# Logical optimizer
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def movie_small():
+    return load_dataset("movie", max_rows=80)
+
+
+def test_logical_optimizer_never_increases_cost(movie_small):
+    table, oracle = movie_small
+    backends = bk.make_backends(oracle)
+    q = WORKLOADS["movie"][9]
+    plan = q.plan_for(table)
+    res = lopt.optimize(plan, table, backends,
+                        cfg=lopt.LogicalOptConfig(n_iterations=4, seed=3))
+    assert res.best_cost <= res.initial_cost
+    for c in res.accepted_set[1:]:
+        parent = res.candidates[c.parent]
+        assert c.cost <= parent.cost
+        assert c.acc >= 0.8
+
+
+def test_logical_optimizer_finds_savings_on_large_query(movie_small):
+    table, oracle = movie_small
+    backends = bk.make_backends(oracle)
+    q = WORKLOADS["movie"][9]
+    plan = q.plan_for(table)
+    best = min(lopt.optimize(
+        plan, table, backends,
+        cfg=lopt.LogicalOptConfig(n_iterations=6, seed=s)).best_cost
+        for s in range(3))
+    assert best < 0.7 * lopt.optimize(
+        plan, table, backends,
+        cfg=lopt.LogicalOptConfig(n_iterations=0)).initial_cost
+
+
+def test_optimizer_meters_its_own_overhead(movie_small):
+    table, oracle = movie_small
+    backends = bk.make_backends(oracle)
+    plan = WORKLOADS["movie"][9].plan_for(table)
+    res = lopt.optimize(plan, table, backends,
+                        cfg=lopt.LogicalOptConfig(n_iterations=3))
+    assert res.meter.calls("rewriter") == 3
+    assert res.meter.total.usd > 0
+    assert res.opt_wall_s > 0
+
+
+def test_beam_search_costs_more_than_random_walk(movie_small):
+    table, oracle = movie_small
+    backends = bk.make_backends(oracle)
+    plan = WORKLOADS["movie"][9].plan_for(table)
+    r1 = lopt.optimize(plan, table, backends,
+                       cfg=lopt.LogicalOptConfig(n_iterations=3))
+    r2 = lopt.optimize_beam(plan, table, backends,
+                            cfg=lopt.LogicalOptConfig(n_iterations=3),
+                            beam_width=2)
+    assert r2.meter.calls("rewriter") >= r1.meter.calls("rewriter")
+
+
+def test_judge_rejects_corrupted_rewrites_mostly(movie_small):
+    table, oracle = movie_small
+    backends = bk.make_backends(oracle)
+    always_bad = rw.LLMSimRewriter(error_rate=1.0)
+    rejected = total = 0
+    for qi in (8, 9, 10):
+        plan = WORKLOADS["movie"][qi].plan_for(table)
+        res = lopt.optimize(plan, table, backends, rewriter=always_bad,
+                            cfg=lopt.LogicalOptConfig(n_iterations=4,
+                                                      seed=qi))
+        for c in res.candidates[1:]:
+            total += 1
+            rejected += not c.accepted
+    assert total > 0
+    assert rejected / total >= 0.5
+
+
+# ---------------------------------------------------------------------------
+# Physical optimizer
+# ---------------------------------------------------------------------------
+
+def test_select_tier_margin_semantics():
+    assert popt.select_tier({"m2": 0.05, "m3": 0.1, "m*": 0.15},
+                            delta_min=0.2) == "m1"
+    assert popt.select_tier({"m2": 0.25, "m3": 0.3, "m*": 0.32},
+                            delta_min=0.2) == "m2"
+    # marginal gains: m2 (+0.25) then m* (+0.3 over m2's 0.25)
+    assert popt.select_tier({"m2": 0.25, "m3": 0.4, "m*": 0.55},
+                            delta_min=0.2) == "m*"
+
+
+def test_physical_optimizer_assigns_all_llm_ops(movie_small):
+    table, oracle = movie_small
+    backends = bk.make_backends(oracle)
+    plan = WORKLOADS["movie"][8].plan_for(table)
+    res = popt.optimize(plan, table, backends,
+                        cfg=popt.PhysicalOptConfig(estimator="approx"))
+    llm_idx = [i for i, o in enumerate(plan.ops) if o.is_llm]
+    assert set(res.assignments) == set(llm_idx)
+    for i in llm_idx:
+        assert res.plan.ops[i].tier in DEFAULT_TIERS
+
+
+def test_async_mode_faster_than_sync(movie_small):
+    table, oracle = movie_small
+    backends = bk.make_backends(oracle)
+    plan = WORKLOADS["movie"][8].plan_for(table)
+    sync = popt.optimize(plan, table, backends,
+                         cfg=popt.PhysicalOptConfig(mode="sync"))
+    asyn = popt.optimize(plan, table, backends,
+                         cfg=popt.PhysicalOptConfig(mode="async",
+                                                    concurrency=16))
+    assert asyn.opt_wall_s < sync.opt_wall_s
+
+
+def test_estimator_overhead_ordering(movie_small):
+    """m*-invocation counts: approx < exact on an operator with real
+    inter-tier disagreement (a hard map); plan level approx <= exact."""
+    from repro.core import improvement as imp
+    table, oracle = movie_small
+    op = P.Operator(P.MAP, "According to the movie plot, extract the "
+                    "genre(s) of each movie.", "Plot", "Genre")
+    values = table.column("Plot")
+    calls = {}
+    for est in ("exact", "pushdown", "reuse", "approx"):
+        backends = bk.make_backends(oracle)
+        r = imp.improvement_scores(backends, op, values, method=est)
+        calls[est] = r.meter.calls("m*")
+    assert calls["approx"] < calls["exact"]
+    assert calls["approx"] <= calls["reuse"] <= calls["pushdown"] \
+        <= calls["exact"]
+
+    backends = bk.make_backends(oracle)
+    plan = WORKLOADS["movie"][8].plan_for(table)
+    plan_calls = {}
+    for est in ("exact", "approx"):
+        res = popt.optimize(plan, table, backends,
+                            cfg=popt.PhysicalOptConfig(estimator=est))
+        plan_calls[est] = res.meter.calls("m*")
+    assert plan_calls["approx"] <= plan_calls["exact"]
+
+
+def test_smart_variants_run(movie_small):
+    table, oracle = movie_small
+    backends = bk.make_backends(oracle)
+    op = P.Operator(P.FILTER, "The rating is higher than 9.", "IMDB_rating")
+    values = table.column("IMDB_rating")[:40]
+    for variant in ("exhaustive", "efficient", "multi-model"):
+        tier, scores, meter = popt.smart_select(
+            op, values, backends, delta_min=0.2, variant=variant)
+        assert tier in DEFAULT_TIERS
+        assert meter.calls("m*") > 0

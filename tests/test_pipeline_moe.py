@@ -1,0 +1,99 @@
+"""Data pipeline determinism/sharding + MoE dispatch implementations."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import TokenPipeline
+
+
+def test_pipeline_deterministic_per_step():
+    p = TokenPipeline(vocab_size=100, global_batch=8, seq_len=16, seed=3)
+    a = p.batch_at(5)["tokens"]
+    b = p.batch_at(5)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    c = p.batch_at(6)["tokens"]
+    assert not np.array_equal(a, c)
+
+
+def test_pipeline_dp_shards_partition_global_batch():
+    """Rank shards must tile the exact global batch (no overlap/gap)."""
+    full = TokenPipeline(vocab_size=50, global_batch=8, seq_len=4,
+                         seed=1).batch_at(2)["tokens"]
+    parts = [TokenPipeline(vocab_size=50, global_batch=8, seq_len=4,
+                           dp_rank=r, dp_world=4, seed=1).batch_at(2)["tokens"]
+             for r in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), full)
+
+
+def test_pipeline_rejects_indivisible_batch():
+    with pytest.raises(ValueError):
+        TokenPipeline(vocab_size=10, global_batch=7, seq_len=4, dp_world=2)
+
+
+def test_pipeline_document_packing():
+    docs = ["hello world", "semantic operators over tables"] * 10
+    p = TokenPipeline(vocab_size=300, global_batch=4, seq_len=12,
+                      documents=docs)
+    b = p.batch_at(0)["tokens"]
+    assert b.shape == (4, 12)
+    assert (b < 300).all()
+
+
+def test_pipeline_prefetch_iterator():
+    p = TokenPipeline(vocab_size=64, global_batch=4, seq_len=8, seed=9)
+    it = p.iter_from(3)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], p.batch_at(3)["tokens"])
+    second = next(it)
+    np.testing.assert_array_equal(second["tokens"], p.batch_at(4)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# MoE: shard_map dispatch must match the pjit-gather baseline
+# ---------------------------------------------------------------------------
+
+def test_moe_shardmap_matches_gather():
+    from repro.configs import get_config, reduced
+    from repro.models import ffn, registry
+    cfg = reduced(get_config("granite-moe-1b-a400m"))
+    bundle = registry.build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    # grab one layer's ffn params (strip the stacked layer dim)
+    import repro.models.common as cm
+    lp = jax.tree.map(lambda p: cm.Param(p.value[0], p.axes[1:]),
+                      params["layers"]["ffn"], is_leaf=cm.is_param)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y_gather = ffn.moe_forward_gather(lp, x, cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    y_sm = ffn.moe_forward_shardmap(lp, x, cfg, mesh, dp_axes=("data",))
+    np.testing.assert_allclose(np.asarray(y_gather), np.asarray(y_sm),
+                               atol=2e-4)
+
+
+def test_engine_continuous_batching_ssm():
+    """Continuous batching over recurrent-state (Mamba2) architectures:
+    per-slot SSM states must be independent."""
+    from repro.configs import get_config, reduced
+    from repro.engine import ContinuousBatcher, GenerationEngine
+    from repro.models import registry
+    cfg = reduced(get_config("mamba2-1.3b"))
+    bundle = registry.build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    def solo(prompt):
+        eng = GenerationEngine(bundle, params, max_len=64, n_slots=1)
+        cb = ContinuousBatcher(eng)
+        rid = cb.submit(prompt, max_new_tokens=6)
+        return cb.run()[rid].output_ids
+
+    prompts = [f"ssm request {i}" for i in range(4)]
+    want = [solo(p) for p in prompts]
+    eng = GenerationEngine(bundle, params, max_len=64, n_slots=2)
+    cb = ContinuousBatcher(eng)
+    rids = [cb.submit(p, max_new_tokens=6) for p in prompts]
+    got = cb.run()
+    for rid, w in zip(rids, want):
+        assert got[rid].output_ids == w

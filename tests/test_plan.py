@@ -1,0 +1,95 @@
+"""Plan IR: structure, legality, selectivity, serialization."""
+import pytest
+
+from repro.core import plan as P
+
+
+def chain(*ops):
+    return P.LogicalPlan(tuple(ops), source="t")
+
+
+def test_default_selectivities():
+    assert P.Operator(P.FILTER, "x", "a").selectivity == 0.5
+    assert P.Operator(P.MAP, "x", "a", "b").selectivity == 1.0
+    assert P.Operator(P.REDUCE, "x", "a").selectivity == 0.0
+    assert P.Operator(P.RANK, "x", "a", "r").selectivity == 1.0
+
+
+def test_fused_filter_selectivity_is_half_over_k():
+    # paper §3.1: merged filters 0.5 -> 0.25 (k=2) -> ~0.167 (k=3)
+    f2 = P.Operator(P.FILTER, "x", "a", fused_from=2)
+    f3 = P.Operator(P.FILTER, "x", "a", fused_from=3)
+    assert f2.selectivity == pytest.approx(0.25)
+    assert f3.selectivity == pytest.approx(0.5 / 3)
+
+
+def test_map_requires_output_column():
+    with pytest.raises(ValueError):
+        P.Operator(P.MAP, "x", "a")
+
+
+def test_depends_on_column_flow():
+    p = chain(
+        P.Operator(P.MAP, "genre", "Plot", "Genre"),
+        P.Operator(P.FILTER, "crime", "Genre"),
+        P.Operator(P.FILTER, "rating", "IMDB"),
+    )
+    assert p.depends_on(1, 0)           # filter reads map output
+    assert not p.depends_on(2, 0)       # rating filter independent
+    assert p.movable_before(2) == 0     # can hoist above the map
+    assert p.movable_before(1) == 1     # blocked by dependency
+
+
+def test_reduce_is_barrier():
+    p = chain(
+        P.Operator(P.REDUCE, "count", "Title"),
+        P.Operator(P.FILTER, "rating", "IMDB"),
+    )
+    assert p.depends_on(1, 0)
+    assert p.movable_before(1) == 1
+
+
+def test_move_and_fuse():
+    a = P.Operator(P.FILTER, "A.", "col")
+    b = P.Operator(P.FILTER, "B.", "col")
+    m = P.Operator(P.MAP, "mm", "x", "y")
+    p = chain(m, a, b)
+    moved = p.move_op(1, 0)
+    assert moved.ops[0].instruction == "A."
+    fused = p.fuse_ops(1, 2, a.with_(instruction="A and B.",
+                                     fused_from=2, selectivity=None))
+    assert len(fused.ops) == 2
+    assert fused.ops[1].selectivity == pytest.approx(0.25)
+
+
+def test_validate_rejects_use_before_def():
+    p = chain(
+        P.Operator(P.FILTER, "crime", "Genre"),
+        P.Operator(P.MAP, "genre", "Plot", "Genre"),
+    )
+    with pytest.raises(ValueError):
+        p.validate()
+
+
+def test_json_roundtrip():
+    p = chain(
+        P.Operator(P.MAP, "m", "a", "b", udf="lambda x: x"),
+        P.Operator(P.FILTER, "f", "b", tier="m2", fused_from=2),
+    )
+    q = P.LogicalPlan.from_json(p.to_json())
+    assert q.signature() == p.signature()
+    assert q.ops[1].tier == "m2"
+
+
+def test_with_tiers_list_and_dict():
+    p = chain(
+        P.Operator(P.MAP, "m", "a", "b"),
+        P.Operator(P.FILTER, "f", "b", udf="lambda x: True"),
+        P.Operator(P.FILTER, "g", "a"),
+    )
+    tiered = p.with_tiers(["m1", "m3"])       # only LLM ops consume
+    assert tiered.ops[0].tier == "m1"
+    assert tiered.ops[1].tier is None
+    assert tiered.ops[2].tier == "m3"
+    tiered2 = p.with_tiers({2: "m*"})
+    assert tiered2.ops[2].tier == "m*"

@@ -1,0 +1,107 @@
+"""Transformation rules: every rewrite must preserve semantics under a
+perfect (oracle) backend; the corruption harness must break them."""
+import random
+
+import pytest
+
+from repro.core import executor as ex
+from repro.core import plan as P
+from repro.core import rules
+from repro.data import WORKLOADS, load_dataset
+
+from conftest import perfect_backends
+
+
+def _result_equal(a, b):
+    va, vb = a.value(), b.value()
+    if isinstance(va, ex.Table) != isinstance(vb, ex.Table):
+        return False                      # scalar vs table: never equal
+    if isinstance(va, ex.Table):
+        ra = set(va.columns.get(ex.ROWID, [])) if va is not None else None
+        rb = set(vb.columns.get(ex.ROWID, [])) if vb is not None else None
+        return ra == rb
+    if isinstance(va, float) and isinstance(vb, float):
+        return va == pytest.approx(vb)
+    return va == vb
+
+
+@pytest.mark.parametrize("dataset", ["movie", "estate"])
+def test_every_rewrite_is_semantics_preserving(dataset):
+    table, oracle = load_dataset(dataset, max_rows=60)
+    backends = perfect_backends(oracle)
+    checked = 0
+    for q in WORKLOADS[dataset]:
+        plan = q.plan_for(table)
+        base = ex.execute(plan, table, backends, default_tier="m*")
+        for cand in rules.all_candidates(plan):
+            new_plan = cand.apply()
+            new_plan.validate()
+            got = ex.execute(new_plan, table, backends, default_tier="m*")
+            assert _result_equal(base, got), (
+                q.qid, cand.rule, cand.description)
+            checked += 1
+    assert checked >= 10  # the workloads must actually exercise the rules
+
+
+def test_corruption_changes_semantics_somewhere():
+    table, oracle = load_dataset("movie", max_rows=120)
+    backends = perfect_backends(oracle)
+    rng = random.Random(0)
+    broke = 0
+    total = 0
+    for q in WORKLOADS["movie"]:
+        plan = q.plan_for(table)
+        base = ex.execute(plan, table, backends, default_tier="m*")
+        for cand in rules.all_candidates(plan)[:3]:
+            bad = rules.corrupt(cand, plan, rng)
+            assert not bad.correct
+            got = ex.execute(bad.apply(), table, backends,
+                             default_tier="m*")
+            total += 1
+            broke += not _result_equal(base, got)
+    assert total >= 5
+    assert broke / total > 0.5     # corruptions usually change results
+
+
+def test_filter_pushdown_moves_before_expensive_map():
+    q = WORKLOADS["movie"][8]      # q9: map, 3 filters, reduce
+    table, _ = load_dataset("movie", max_rows=10)
+    plan = q.plan_for(table)
+    cands = rules.filter_pushdown_candidates(plan)
+    assert cands, "rating filters should be hoistable above the genre map"
+    new = cands[0].apply()
+    assert new.ops[0].kind == P.FILTER
+
+
+def test_fusion_merges_same_column_filters():
+    q = WORKLOADS["movie"][8]
+    table, _ = load_dataset("movie", max_rows=10)
+    plan = q.plan_for(table)
+    cands = rules.operator_fusion_candidates(plan)
+    assert cands
+    fused_plan = cands[0].apply()
+    assert len(fused_plan.ops) == len(plan.ops) - 1
+    fused = [o for o in fused_plan.ops if o.fused_from == 2]
+    assert fused and " and " in fused[0].instruction
+
+
+def test_non_llm_replacement_sets_udf():
+    q = WORKLOADS["movie"][1]      # q2: directed by Nolan
+    table, _ = load_dataset("movie", max_rows=10)
+    plan = q.plan_for(table)
+    cands = rules.non_llm_candidates(plan)
+    assert cands
+    new = cands[0].apply()
+    assert new.ops[0].udf is not None
+    assert new.n_llm_ops == 0
+
+
+def test_semantic_vs_basic_rule_split():
+    assert set(rules.SEMANTIC_RULES) | set(rules.BASIC_RULES) \
+        == set(rules.RULES)
+
+
+def test_no_candidates_on_single_udf_plan():
+    plan = P.LogicalPlan((P.Operator(P.FILTER, "x > 1", "c",
+                                     udf="lambda x: True"),))
+    assert rules.all_candidates(plan) == []

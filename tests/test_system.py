@@ -1,0 +1,92 @@
+"""End-to-end system behaviour: the full Nirvana pipeline on the paper's
+workloads — optimization must cut cost without destroying answers."""
+import pytest
+
+from repro.core import SemanticDataFrame, execute, make_backends
+from repro.core import semhash
+from repro.data import WORKLOADS, load_dataset
+
+from conftest import perfect_backends
+
+
+def answer_correct(got, want, table_truth=None):
+    if want is None:
+        return got is None
+    if isinstance(want, (int, float)) and isinstance(got, (int, float)):
+        scale = max(abs(float(want)), 1e-9)
+        return abs(float(got) - float(want)) / scale < 0.05
+    if hasattr(want, "columns"):          # table: row-set F1
+        if not hasattr(got, "columns"):
+            return False
+        from repro.core.executor import ROWID
+        a = set(got.columns.get(ROWID, []))
+        b = set(want.columns.get(ROWID, []))
+        if not b:
+            return not a
+        f1 = 2 * len(a & b) / max(1, len(a) + len(b))
+        return f1 > 0.9
+    return semhash.semantic_equal(got, want)
+
+
+@pytest.fixture(scope="module")
+def movie_env():
+    table, oracle = load_dataset("movie")
+    return table, make_backends(oracle), perfect_backends(oracle)
+
+
+def test_full_pipeline_reduces_cost_preserves_answer(movie_env):
+    table, backends, perfect = movie_env
+    correct_opt = correct_base = 0
+    cost_opt = cost_base = 0.0
+    qs = [WORKLOADS["movie"][i] for i in (7, 8, 9, 10)]
+    for q in qs:
+        plan = q.plan_for(table)
+        truth = execute(plan, table, perfect, default_tier="m*").value()
+        df = SemanticDataFrame(table)
+        df._ops = plan.ops
+        rep = df.execute(backends)
+        base = df.execute(backends, logical=False, physical=False)
+        correct_opt += answer_correct(rep.result, truth)
+        correct_base += answer_correct(base.result, truth)
+        cost_opt += rep.total_usd
+        cost_base += base.total_usd
+    assert cost_opt < cost_base                 # optimization saves money
+    assert correct_opt >= correct_base - 1     # quality preserved (±1)
+    assert correct_opt >= len(qs) // 2
+
+
+def test_queries_of_all_sizes_run(movie_env):
+    table, backends, _ = movie_env
+    for q in (WORKLOADS["movie"][0], WORKLOADS["movie"][5],
+              WORKLOADS["movie"][11]):
+        df = SemanticDataFrame(table)
+        df._ops = q.plan_for(table).ops
+        rep = df.execute(backends)
+        assert rep.result is not None
+        assert rep.total_usd > 0
+
+
+def test_phase_breakdown_accounts_everything(movie_env):
+    table, backends, _ = movie_env
+    df = SemanticDataFrame(table)
+    df._ops = WORKLOADS["movie"][9].plan_for(table).ops
+    rep = df.execute(backends)
+    pb = rep.phase_breakdown()
+    assert set(pb) == {"execution", "logical_opt", "physical_opt"}
+    assert rep.total_usd == pytest.approx(sum(d["usd"] for d in pb.values()))
+    assert rep.total_wall_s == pytest.approx(
+        sum(d["wall_s"] for d in pb.values()))
+
+
+def test_listing1_api_shape(movie_env):
+    """The Table-1 operator API builds the plan the paper's Listing 1
+    describes."""
+    table, _, _ = movie_env
+    df = (SemanticDataFrame(table)
+          .semantic_map("extract genre", "Plot", "Genre")
+          .semantic_filter("rating > 8.5", "IMDB_rating")
+          .semantic_rank("rank by rating", "IMDB_rating", "r")
+          .semantic_reduce("count", "Title"))
+    plan = df.plan()
+    assert [o.kind for o in plan.ops] == ["map", "filter", "rank", "reduce"]
+    plan.validate()

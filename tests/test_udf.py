@@ -1,0 +1,110 @@
+"""NL -> UDF grammar: the paper's own examples must compile and evaluate."""
+import pytest
+
+from repro.core import plan as P
+from repro.core import udf
+
+
+def f(ins):
+    return udf.compile_udf(P.Operator(P.FILTER, ins, "c"))
+
+
+def m(ins):
+    return udf.compile_udf(P.Operator(P.MAP, ins, "c", "o"))
+
+
+def r(ins):
+    return udf.compile_udf(P.Operator(P.REDUCE, ins, "c"))
+
+
+def test_parse_number_formats():
+    assert udf.parse_number("8.5") == 8.5
+    assert udf.parse_number("92%") == 92
+    assert udf.parse_number("N250m") == 250e6
+    assert udf.parse_number("430 Million Naira") == 430e6
+    assert udf.parse_number("Rp 150,000") == 150000
+    assert udf.parse_number("$123.4M") == pytest.approx(123.4e6)
+    assert udf.parse_number("no digits") is None
+
+
+def test_range_filter_paper_example():
+    # "Score is higher than 8.5 and lower than 9" -> 8.5 < x < 9 (Fig. 3)
+    c = f("The rating is higher than 8.5 and lower than 9.")
+    assert c is not None
+    assert c.fn("8.7") and not c.fn("9.0") and not c.fn("8.5")
+
+
+def test_oscar_filter_paper_example():
+    c = f("Whether the movie has won 2 Oscars.")
+    assert c.fn("Won 2 Oscars. 30 wins total")
+    assert not c.fn("Won 3 Oscars.")
+    assert not c.fn("5 wins & 3 nominations")
+
+
+def test_oscar_more_than():
+    c = f("Whether the movie has ever won more than 3 Oscars?")
+    assert c.fn("Won 4 Oscars.")
+    assert not c.fn("Won 3 Oscars.")
+
+
+def test_entity_filter():
+    c = f("The movie is directed by Christopher Nolan.")
+    assert c.fn("Christopher Nolan")
+    assert not c.fn("Greta Gerwig")
+
+
+def test_image_instruction_never_compiles():
+    assert f("Whether the movie poster image is in the dark style.") is None
+    assert f("Observed from the house picture, whether the house has a "
+             "yard or not.") is None
+    assert m("Extract the style from the poster image.") is None
+
+
+def test_bedrooms_value_set():
+    c = f("Whether the estate has 2 or 3 bedrooms")
+    assert c.fn("3 bedroom duplex for sale")
+    assert not c.fn("5 bedroom duplex for sale")
+
+
+def test_map_price_extraction():
+    c = m("Extract the house price from the detail about the estate.")
+    assert c.fn("... PRICE: N250m") == 250e6
+
+
+def test_map_fx_conversion():
+    c = m("Convert the price in IDR into the price in USD.")
+    assert c.fn("Rp 100,000") == pytest.approx(6.5)
+
+
+def test_reduce_grammar():
+    assert r("Count the number of movies.").fn(["a", "b", "c"]) == 3
+    assert r("Compute the average price.").fn(["10", "20"]) == 15
+    assert r("Compute the total box office gross.").fn(
+        ["$1M", "$2M"]) == pytest.approx(3e6)
+    assert r("Find the maximum rating.").fn(["8.5", "9.2", "7"]) == 9.2
+    assert r("Compute the lowest price for the estates.").fn(
+        ["N250m", "N100m"]) == 100e6
+    assert r("Find the publisher that appears the most.").fn(
+        ["A", "B", "A"]) == "A"
+
+
+def test_reduce_empty_numeric_returns_none():
+    assert r("Compute the average price.").fn(["n/a", "tbd"]) is None
+
+
+def test_unknown_instruction_returns_none():
+    assert f("Does the plot reference obscure mythology?") is None
+
+
+def test_udf_roundtrip_through_plan():
+    c = f("The rating is higher than 9.")
+    op = P.Operator(P.FILTER, "The rating is higher than 9.", "c",
+                    udf=c.source)
+    re = udf.resolve_udf(op)
+    assert re.fn("9.5") and not re.fn("8.0")
+
+
+def test_udf_sandbox_blocks_imports():
+    with pytest.raises(Exception):
+        udf.CompiledUDF("", eval("lambda x: __import__('os')",
+                                 dict(udf._SAFE_GLOBALS)))("x")
