@@ -32,6 +32,7 @@ from repro.core import logical_optimizer as lopt
 from repro.core import physical_optimizer as popt
 from repro.core import plan as plan_ir
 from repro.core import rewriter as rw
+from repro.core import runtime as rt
 from repro.core import semhash
 from repro.core.cost import DEFAULT_TIERS, TierSpec
 from repro.core.backends import SimulatedBackend
@@ -104,26 +105,31 @@ def run_nirvana(q, table, backends, perfect, *, logical=True, physical=True,
                 rewriter=None, batch_size=1, concurrency=16) -> RunResult:
     plan = q.plan_for(table)
     truth = truth_of(plan, table, perfect)
+    # one ExecutionContext for the whole pipeline (optimizers meter their
+    # own phases; the final execution bills into ctx.meter)
+    ctx = rt.ExecutionContext(backends=backends, default_tier="m*",
+                              concurrency=concurrency,
+                              batch_size=batch_size)
     opt_wall = opt_usd = 0.0
     lres = pres = None
     if logical:
+        # configs inherit concurrency/tier from ctx
         cfg = lopt.LogicalOptConfig(n_iterations=n_iterations, seed=seed)
         rewr = rewriter
         if rewr is None and rules is not None:
             rewr = rw.LLMSimRewriter(rule_names=rules)
-        lres = lopt.optimize(plan, table, backends, rewriter=rewr, cfg=cfg)
+        lres = lopt.optimize(plan, table, ctx, rewriter=rewr, cfg=cfg)
         plan = lres.best
         opt_wall += lres.opt_wall_s
         opt_usd += lres.meter.total.usd
     if physical and plan.n_llm_ops:
-        pres = popt.optimize(plan, table, backends,
+        pres = popt.optimize(plan, table, ctx,
                              cfg=popt.PhysicalOptConfig(
                                  estimator=estimator, seed=seed))
         plan = pres.plan
         opt_wall += pres.opt_wall_s
         opt_usd += pres.meter.total.usd
-    run = ex.execute(plan, table, backends, default_tier="m*",
-                     concurrency=concurrency, batch_size=batch_size)
+    run = ex.execute(plan, table, ctx)
     name = "nirvana" if (logical and physical) else \
         ("nirvana-no-logical" if physical else
          ("nirvana-no-physical" if logical else "nirvana-no-opt"))
@@ -153,7 +159,9 @@ def run_palimpzest_analog(q, table, backends, perfect) -> RunResult:
         if oc.plan is None or oc.plan.signature() == plan.signature():
             break
         plan = oc.plan
-    run = ex.execute(plan, table, backends, default_tier="m*")
+    run = ex.execute(plan, table,
+                     rt.ExecutionContext(backends=backends,
+                                         default_tier="m*"))
     return RunResult("palimpzest", table.name, q.qid, q.size,
                      run.wall_s, run.meter.total.usd,
                      answer_correct(run.value(), truth),
@@ -166,9 +174,10 @@ def run_lotus_analog(q, table, backends, perfect) -> RunResult:
     as physical optimization with the exact estimator and no rewrites."""
     plan = q.plan_for(table)
     truth = truth_of(plan, table, perfect)
-    pres = popt.optimize(plan, table, backends,
+    ctx = rt.ExecutionContext(backends=backends, default_tier="m*")
+    pres = popt.optimize(plan, table, ctx,
                          cfg=popt.PhysicalOptConfig(estimator="exact"))
-    run = ex.execute(pres.plan, table, backends, default_tier="m*")
+    run = ex.execute(pres.plan, table, ctx)
     return RunResult("lotus", table.name, q.qid, q.size,
                      pres.opt_wall_s + run.wall_s,
                      pres.meter.total.usd + run.meter.total.usd,
@@ -186,7 +195,9 @@ def run_tablerag_analog(q, table, backends, perfect, k: int = 50
     plan = q.plan_for(table)
     truth = truth_of(plan, table, perfect)
     sub = table.head(k)
-    run = ex.execute(plan, sub, backends, default_tier="m1")
+    run = ex.execute(plan, sub,
+                     rt.ExecutionContext(backends=backends,
+                                         default_tier="m1"))
     got = run.value()
     correct = answer_correct(got, truth)
     return RunResult("tablerag", table.name, q.qid, q.size,

@@ -53,13 +53,28 @@ class Usage:
 
 class UsageMeter:
     """Per-tier usage accumulator; threaded through optimizers/executors so
-    every experiment can report calls/usd/latency per model (Fig. 10)."""
+    every experiment can report calls/usd/latency per model (Fig. 10).
+
+    Besides the per-tier totals, the meter keeps ``call_log`` — one
+    ``(tier, latency_s)`` entry per LLM call, in issue order. The
+    event-driven scheduler (``runtime.EventScheduler``) consumes this log
+    to place each call on a simulated worker, so wall-clock accounting is
+    per-call rather than per-operator-wave. Backends that know their true
+    per-call latencies pass them explicitly; otherwise the aggregate
+    latency is split uniformly across the calls."""
 
     def __init__(self):
         self.by_tier: Dict[str, Usage] = {}
+        self.call_log: List[tuple] = []      # (tier_name, latency_s)
 
-    def record(self, tier_name: str, usage: Usage):
+    def record(self, tier_name: str, usage: Usage,
+               per_call_latency_s: Optional[Sequence[float]] = None):
         self.by_tier.setdefault(tier_name, Usage()).add(usage)
+        if per_call_latency_s is None and usage.calls > 0:
+            per_call_latency_s = [usage.latency_s / usage.calls] \
+                * usage.calls
+        for lat in per_call_latency_s or ():
+            self.call_log.append((tier_name, lat))
 
     @property
     def total(self) -> Usage:
@@ -248,14 +263,21 @@ class SimulatedBackend:
             usage = self._usage(op, n_calls=max(1, (len(values) + 31) // 32),
                                 values=values)
             if meter:
-                meter.record(self.tier.name, usage)
+                meter.record(self.tier.name, usage,
+                             per_call_latency_s=self._per_call(usage))
             return [out]
         outs = [self._output(op, v, batch_size) for v in values]
         n_calls = max(1, (len(values) + batch_size - 1) // batch_size)
         usage = self._usage(op, n_calls=n_calls, values=values)
         if meter:
-            meter.record(self.tier.name, usage)
+            meter.record(self.tier.name, usage,
+                         per_call_latency_s=self._per_call(usage))
         return outs
+
+    @staticmethod
+    def _per_call(usage: Usage) -> List[float]:
+        """Per-call latency report: tier latency is homogeneous per op."""
+        return [usage.latency_s / usage.calls] * usage.calls
 
     def _usage(self, op: plan_ir.Operator, n_calls: int,
                values: Sequence[Any]) -> Usage:

@@ -26,6 +26,7 @@ from repro.core import executor as ex
 from repro.core import logical_optimizer as lopt
 from repro.core import physical_optimizer as popt
 from repro.core import plan as plan_ir
+from repro.core import runtime as rt
 from repro.core.table import Table
 
 
@@ -101,8 +102,8 @@ class SemanticDataFrame:
     def plan(self) -> plan_ir.LogicalPlan:
         return plan_ir.LogicalPlan(self._ops, source=self.table.name)
 
-    def execute(self, backends: Dict[str, bk.Backend], *,
-                logical: bool = True, physical: bool = True,
+    def execute(self, backends: "Dict[str, bk.Backend] | rt.ExecutionContext",
+                *, logical: bool = True, physical: bool = True,
                 rewriter=None,
                 lcfg: Optional[lopt.LogicalOptConfig] = None,
                 pcfg: Optional[popt.PhysicalOptConfig] = None,
@@ -111,20 +112,29 @@ class SemanticDataFrame:
         plan = self.plan()
         plan.validate()
 
+        # one ExecutionContext threads the whole pipeline: the logical
+        # optimizer's candidate evaluation, the physical optimizer's sample
+        # flow, and the final execution (optimizers fork their own meters)
+        if isinstance(backends, rt.ExecutionContext):
+            ctx = backends
+        else:
+            ctx = rt.ExecutionContext(backends=backends,
+                                      default_tier=default_tier,
+                                      concurrency=concurrency)
+
         lres = None
         if logical:
-            lres = lopt.optimize(plan, self.table, backends,
-                                 rewriter=rewriter,
+            # configs inherit tier/concurrency from the context by default
+            lres = lopt.optimize(plan, self.table, ctx, rewriter=rewriter,
                                  cfg=lcfg or lopt.LogicalOptConfig())
             plan = lres.best
 
         pres = None
         if physical and plan.n_llm_ops:
-            pres = popt.optimize(plan, self.table, backends,
+            pres = popt.optimize(plan, self.table, ctx,
                                  cfg=pcfg or popt.PhysicalOptConfig())
             plan = pres.plan
 
-        run = ex.execute(plan, self.table, backends,
-                         default_tier=default_tier, concurrency=concurrency)
+        run = ex.execute(plan, self.table, ctx)
         return QueryReport(result=run.value(), logical=lres, physical=pres,
                            execution=run, plan=plan)

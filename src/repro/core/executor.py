@@ -1,26 +1,38 @@
-"""Physical-plan executor (paper §2.2 "query executor").
+"""Physical-plan executor (paper §2.2 "query executor") — morsel-driven.
 
 Runs a plan over a :class:`Table`: UDF operators execute as native compute;
 LLM operators dispatch to the backend tier assigned by the physical plan
 (default tier when unassigned — the paper uses the strongest model as the
-default backbone). Execution wall-clock is *simulated*: every backend call
-reports a latency drawn from its tier's latency model, and the executor
-schedules calls over ``concurrency`` workers (paper: 16 coroutines),
-reporting the resulting makespan. Monetary cost comes from tier token
-prices. Both are accumulated in a UsageMeter so benchmarks can break costs
-down per model tier (paper Fig. 10).
+default backbone).
+
+Execution wall-clock is *simulated* through the shared event-driven
+scheduler (``runtime.EventScheduler``): every backend call reports its
+latency into the meter's call log and is placed on the earliest-free worker
+of its tier. The table is split into row **morsels** so operators pipeline:
+a downstream map starts on rows an upstream filter has already passed
+instead of waiting for the whole column (``morsel_size=0`` restores the
+per-operator barrier). Reduce and rank are pipeline barriers — they need
+every surviving row.
+
+Monetary cost comes from tier token prices; both axes accumulate in a
+UsageMeter so benchmarks can break costs down per model tier (paper
+Fig. 10). Morsel pipelining changes only the schedule — results, call
+counts, and meter totals are identical to barrier execution (with the
+default ``batch_size=1``; larger batches fill within morsels).
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, List, Optional, Tuple
 
 from repro.core import backends as bk
 from repro.core import plan as plan_ir
-from repro.core import udf as udf_mod
+from repro.core import runtime as rt
 from repro.core.table import Table
+
+# re-exported for backwards compatibility (they live in runtime now)
+from repro.core.runtime import OutputCache, run_llm_op   # noqa: F401
 
 ROWID = "_rowid"
 
@@ -37,7 +49,7 @@ class ExecutionResult:
     table: Optional[Table]          # surviving rows (None after reduce)
     scalar: Any                     # reduce output (None otherwise)
     meter: bk.UsageMeter
-    wall_s: float                   # simulated wall-clock (scheduled)
+    wall_s: float                   # simulated wall-clock (event-scheduled)
     cpu_s: float                    # real python time spent
     rows_processed: float = 0.0     # LLM-processed records (Fig. 13 metric)
 
@@ -46,166 +58,127 @@ class ExecutionResult:
         return self.scalar if self.scalar is not None else self.table
 
 
-def _makespan(total_latency_s: float, n_calls: int, concurrency: int,
-              per_call_s: Optional[float] = None) -> float:
-    """Wall-clock of n homogeneous calls over W workers."""
-    if n_calls <= 0:
-        return 0.0
-    per_call = per_call_s if per_call_s is not None \
-        else total_latency_s / n_calls
-    waves = math.ceil(n_calls / max(1, concurrency))
-    return waves * per_call
+def _split_morsels(table: Table, morsel_size: int,
+                   batch_size: int) -> List[Tuple[Table, float]]:
+    """Split into (morsel, ready_time) pairs. Full morsels are multiples of
+    the batch size, so batch-prompting call counts match the barrier
+    executor exactly: sum(ceil(s_i/b)) == ceil(n/b)."""
+    if morsel_size <= 0 or table.n_rows <= morsel_size:
+        return [(table, 0.0)]
+    step = max(morsel_size, batch_size)
+    step = ((step + batch_size - 1) // batch_size) * batch_size
+    return [(table.take(range(i, min(i + step, table.n_rows))), 0.0)
+            for i in range(0, table.n_rows, step)]
 
 
-def _vkey(v) -> str:
-    return v if isinstance(v, str) else repr(v)
-
-
-class OutputCache:
-    """LLM-output memo keyed by (tier, op semantics, value).
-
-    Semantic operators are deterministic per (model, prompt) here, so
-    repeated sample executions — the judge runs the original plan once per
-    optimizer iteration, rewritten plans share most operators — hit the
-    cache instead of re-invoking the backend. This is the executor-level
-    analogue of the paper's computation-reuse theme (cf. QuestCache [18]);
-    only cache *misses* are billed."""
-
-    def __init__(self):
-        self.data: Dict[tuple, Any] = {}
-        self.hits = 0
-        self.misses = 0
-
-    def key(self, op: plan_ir.Operator, tier: str, batch: int, v) -> tuple:
-        return (op.kind, op.instruction, op.input_column, tier, batch,
-                _vkey(v))
-
-
-def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
-               meter: bk.UsageMeter, *, batch_size: int = 1,
-               cache: Optional[OutputCache] = None):
-    """Execute one LLM operator, via the cache when provided. Returns
-    (outputs, n_calls_made, latency_of_calls_made)."""
-    before_calls = meter.calls(tier_name)
-    before_lat = meter.by_tier.get(tier_name, bk.Usage()).latency_s
-    if cache is None or op.kind == plan_ir.REDUCE:
-        if cache is not None and op.kind == plan_ir.REDUCE:
-            rkey = cache.key(op, tier_name, batch_size,
-                             "\x1e".join(_vkey(v) for v in values))
-            if rkey in cache.data:
-                cache.hits += 1
-                return [cache.data[rkey]], 0, 0.0
-            outs = backend.run_values(op, values, meter=meter,
-                                      batch_size=batch_size)
-            cache.misses += 1
-            cache.data[rkey] = outs[0]
-        else:
-            outs = backend.run_values(op, values, meter=meter,
-                                      batch_size=batch_size)
-        n_calls = meter.calls(tier_name) - before_calls
-        lat = meter.by_tier[tier_name].latency_s - before_lat
-        return outs, n_calls, lat
-
-    keys = [cache.key(op, tier_name, batch_size, v) for v in values]
-    missing = [i for i, k in enumerate(keys) if k not in cache.data]
-    cache.hits += len(values) - len(missing)
-    cache.misses += len(missing)
-    if missing:
-        outs_new = backend.run_values(op, [values[i] for i in missing],
-                                      meter=meter, batch_size=batch_size)
-        for i, o in zip(missing, outs_new):
-            cache.data[keys[i]] = o
-    n_calls = meter.calls(tier_name) - before_calls
-    lat = (meter.by_tier[tier_name].latency_s - before_lat) if missing \
-        else 0.0
-    return [cache.data[k] for k in keys], n_calls, lat
+def _merge(parts: List[Tuple[Table, float]]) -> Tuple[Table, float]:
+    tables = [t for t, _ in parts]
+    ready = max((r for _, r in parts), default=0.0)
+    return (tables[0] if len(tables) == 1 else Table.concat(tables)), ready
 
 
 def execute(plan: plan_ir.LogicalPlan, table: Table,
-            backends: Dict[str, bk.Backend],
-            *, default_tier: str = "m*", concurrency: int = 16,
-            batch_size: int = 1, cache: Optional[OutputCache] = None,
-            meter: Optional[bk.UsageMeter] = None) -> ExecutionResult:
+            backends, *, default_tier: Optional[str] = None,
+            concurrency: Optional[int] = None,
+            batch_size: Optional[int] = None,
+            cache: Optional[OutputCache] = None,
+            meter: Optional[bk.UsageMeter] = None,
+            morsel_size: Optional[int] = None,
+            scheduler: Optional[rt.EventScheduler] = None
+            ) -> ExecutionResult:
+    """Execute ``plan`` over ``table``.
+
+    ``backends`` is either a ``{tier: Backend}`` dict (legacy call shape;
+    the keyword arguments then configure the run, with the
+    ``ExecutionContext`` field defaults filling the gaps) or a
+    :class:`runtime.ExecutionContext` (every keyword argument given here
+    overrides the matching context field). A caller-supplied ``scheduler``
+    shares its worker pools across executions — the judge overlaps both
+    sample runs on one pool this way — and ``wall_s`` then reports the
+    scheduler's cumulative makespan.
+    """
     t0 = time.perf_counter()
-    meter = meter if meter is not None else bk.UsageMeter()
+    over = {k: v for k, v in (("default_tier", default_tier),
+                              ("concurrency", concurrency),
+                              ("batch_size", batch_size),
+                              ("cache", cache), ("meter", meter),
+                              ("morsel_size", morsel_size))
+            if v is not None}
+    ctx = rt.as_context(backends, **over)
+    meter = ctx.meter
+    sched = scheduler if scheduler is not None else ctx.make_scheduler()
+
     table = with_rowids(table)
-    wall = 0.0
+    parts = _split_morsels(table, ctx.morsel_size, ctx.batch_size)
     scalar = None
     rows_processed = 0.0
 
-    for k, op in enumerate(plan.ops):
-        if table.n_rows == 0:
-            # a filter upstream emptied the table: maps must still define
-            # their output column (a downstream reduce reads it), filters/
-            # ranks are no-ops, reduces aggregate the empty column
-            if op.kind == plan_ir.MAP:
-                table = table.with_column(op.output_column, [])
-                continue
-            if op.kind != plan_ir.REDUCE:
-                continue
-            values = table.columns.get(op.input_column, [])
-        else:
-            values = table.resolve(op.input_column)
-        if op.udf is not None:
-            compiled = udf_mod.resolve_udf(op)
-
-            def safe(v, default=None):
-                # generated UDFs are format-fragile by design (Fig. 12b);
-                # a row that crashes one yields the kind's null answer
-                try:
-                    return compiled.fn(v)
-                except Exception:
-                    return default
-
-            wall += table.n_rows * 2e-6
-            if op.kind == plan_ir.FILTER:
-                mask = [bool(safe(v, False)) for v in values]
-                table = table.select(mask)
-            elif op.kind == plan_ir.MAP:
-                table = table.with_column(
-                    op.output_column, [safe(v) for v in values])
-            elif op.kind == plan_ir.REDUCE:
-                scalar = safe(list(values))
-            elif op.kind == plan_ir.RANK:
-                order = safe(list(values), list(range(len(values))))
-                ranks = [0] * len(order)
-                for r, i in enumerate(order):
-                    ranks[i] = r
-                table = table.with_column(op.output_column or "rank", ranks,
-                                          "numeric")
-            continue
-
-        tier_name = op.tier or default_tier
-        backend = backends[tier_name]
+    def llm_calls(op, tbl, values, ready):
+        """Dispatch one operator over one morsel; schedule its calls."""
+        nonlocal rows_processed
+        backend = ctx.backend(op.tier)
         # account under the backend's own tier name (a dict key like "m*"
         # may map to a differently-named backend, e.g. a JAXBackend tier)
-        outs, n_calls, lat = run_llm_op(op, values, backend,
-                                        backend.tier.name, meter,
-                                        batch_size=batch_size, cache=cache)
-        wall += _makespan(lat, n_calls, concurrency)
+        cursor = len(meter.call_log)
+        outs, _, _ = rt.run_llm_op(op, values, backend, backend.tier.name,
+                                   meter, batch_size=ctx.batch_size,
+                                   cache=ctx.cache)
+        _, finish = sched.drain(meter, cursor, ready_s=ready)
         rows_processed += len(values)
+        return outs, finish
 
-        if op.kind == plan_ir.FILTER:
-            mask = [bool(o) if isinstance(o, bool) else
-                    str(o).strip().lower().startswith(("true", "yes"))
-                    for o in outs]
-            table = table.select(mask)
-        elif op.kind == plan_ir.MAP:
-            table = table.with_column(op.output_column, outs)
-        elif op.kind == plan_ir.REDUCE:
-            scalar = outs[0]
-        elif op.kind == plan_ir.RANK:
-            sims = [(o if isinstance(o, (int, float)) else i)
-                    for i, o in enumerate(outs)]
-            order = sorted(range(len(sims)), key=lambda i: sims[i],
-                           reverse=True)
-            ranks = [0] * len(order)
-            for r, i in enumerate(order):
-                ranks[i] = r
-            table = table.with_column(op.output_column or "rank", ranks,
-                                      "numeric")
+    for op in plan.ops:
+        if op.kind in (plan_ir.REDUCE, plan_ir.RANK):
+            # pipeline barrier: needs every surviving row
+            tbl, ready = _merge(parts)
+            if op.kind == plan_ir.RANK and tbl.n_rows == 0:
+                parts = [(tbl, ready)]
+                continue
+            values = tbl.columns.get(op.input_column, []) \
+                if tbl.n_rows == 0 else tbl.resolve(op.input_column)
+            if op.udf is not None:
+                finish = sched.submit(rt.HOST_TIER,
+                                      tbl.n_rows * rt.UDF_SECONDS_PER_ROW,
+                                      ready_s=ready)
+                tbl, out = rt.run_udf_op(op, tbl, values)
+                if op.kind == plan_ir.REDUCE:
+                    scalar = out
+            else:
+                outs, finish = llm_calls(op, tbl, values, ready)
+                tbl, out = rt.apply_outputs(op, tbl, outs)
+                if op.kind == plan_ir.REDUCE:
+                    scalar = out
+            # everything downstream restarts from the barrier's output
+            parts = _split_morsels(tbl, ctx.morsel_size, ctx.batch_size)
+            parts = [(t, finish) for t, _ in parts]
+            continue
 
+        # streamable operator (filter / map): advance each morsel
+        new_parts: List[Tuple[Table, float]] = []
+        for tbl, ready in parts:
+            if tbl.n_rows == 0:
+                # an upstream filter emptied this morsel: maps must still
+                # define their output column (downstream reads it)
+                if op.kind == plan_ir.MAP:
+                    tbl = tbl.with_column(op.output_column, [])
+                new_parts.append((tbl, ready))
+                continue
+            values = tbl.resolve(op.input_column)
+            if op.udf is not None:
+                # host UDF morsels pipeline against LLM work but serialize
+                # against each other (one Python process)
+                finish = sched.submit(rt.HOST_TIER,
+                                      tbl.n_rows * rt.UDF_SECONDS_PER_ROW,
+                                      ready_s=ready)
+                tbl, _ = rt.run_udf_op(op, tbl, values)
+            else:
+                outs, finish = llm_calls(op, tbl, values, ready)
+                tbl, _ = rt.apply_outputs(op, tbl, outs)
+            new_parts.append((tbl, finish))
+        parts = new_parts
+
+    out_table, _ = _merge(parts)
     return ExecutionResult(
-        table=None if scalar is not None else table,
-        scalar=scalar, meter=meter, wall_s=wall,
+        table=None if scalar is not None else out_table,
+        scalar=scalar, meter=meter, wall_s=sched.makespan,
         cpu_s=time.perf_counter() - t0, rows_processed=rows_processed)

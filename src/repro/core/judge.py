@@ -34,6 +34,7 @@ from repro.core import backends as bk
 from repro.core import cost as cost_mod
 from repro.core import executor as ex
 from repro.core import plan as plan_ir
+from repro.core import runtime as rt
 from repro.core import semhash
 from repro.core.table import Table
 
@@ -89,27 +90,35 @@ class Judge:
 
     Sample executions share an :class:`executor.OutputCache` across
     ratings: the original plan is billed once, and rewritten plans only pay
-    for operators the rewrite actually changed."""
-    backends: Dict[str, bk.Backend]
+    for operators the rewrite actually changed. Both sample executions of a
+    rating run against **one** event scheduler, so they overlap on the same
+    worker pool (the paper's 16 coroutines serve the verifier too) instead
+    of being accounted back-to-back."""
+    backends: "Dict[str, bk.Backend] | rt.ExecutionContext"
     judge_tier: str = "m*"          # the tier priced for the rating call
     exec_tier: str = "m*"           # backend used to execute sample plans
     concurrency: int = 16
 
     def __post_init__(self):
-        self.cache = ex.OutputCache()
+        if isinstance(self.backends, rt.ExecutionContext):
+            # a caller-built context wins over the field defaults
+            self.ctx = self.backends.fork(cache=ex.OutputCache())
+            self.exec_tier = self.ctx.default_tier
+            self.concurrency = self.ctx.concurrency
+        else:
+            self.ctx = rt.ExecutionContext(
+                backends=self.backends, default_tier=self.exec_tier,
+                concurrency=self.concurrency, cache=ex.OutputCache())
+        self.cache = self.ctx.cache
 
     def rate(self, original: plan_ir.LogicalPlan,
              rewritten: plan_ir.LogicalPlan, sample: Table,
              meter: Optional[bk.UsageMeter] = None) -> JudgeResult:
         meter = meter if meter is not None else bk.UsageMeter()
-        ra = ex.execute(original, sample, self.backends,
-                        default_tier=self.exec_tier,
-                        concurrency=self.concurrency, meter=meter,
-                        cache=self.cache)
-        rb = ex.execute(rewritten, sample, self.backends,
-                        default_tier=self.exec_tier,
-                        concurrency=self.concurrency, meter=meter,
-                        cache=self.cache)
+        rctx = self.ctx.fork(meter=meter)
+        sched = rctx.make_scheduler()
+        ra = ex.execute(original, sample, rctx, scheduler=sched)
+        rb = ex.execute(rewritten, sample, rctx, scheduler=sched)
 
         if (ra.scalar is None) != (rb.scalar is None):
             rating, detail = 0.0, "result-kind mismatch"
@@ -129,10 +138,10 @@ class Judge:
                          usd=tier.usd(tok_in, 4.0),
                          latency_s=tier.latency(4.0))
         meter.record(self.judge_tier, usage)
-        # execution + judging both contribute to verification wall-clock
+        # execution + judging both contribute to verification wall-clock;
+        # the shared scheduler's makespan covers both sample runs
         usage_total = bk.Usage(calls=usage.calls, tok_in=usage.tok_in,
                                tok_out=usage.tok_out, usd=usage.usd,
-                               latency_s=usage.latency_s + ra.wall_s
-                               + rb.wall_s)
+                               latency_s=usage.latency_s + sched.makespan)
         return JudgeResult(rating=float(max(0.0, min(1.0, rating))),
                            usage=usage_total, detail=detail)

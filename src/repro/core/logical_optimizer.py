@@ -28,6 +28,7 @@ from repro.core import cost as cost_mod
 from repro.core import judge as judge_mod
 from repro.core import plan as plan_ir
 from repro.core import rewriter as rw
+from repro.core import runtime as rt
 from repro.core.table import Table
 
 
@@ -68,8 +69,9 @@ class LogicalOptConfig:
     sample_max: int = 24            # verification sample cap — execution-
                                     # consistency needs far fewer rows than
                                     # the physical optimizer's scoring
-    concurrency: int = 16
-    default_tier: str = "m*"
+    # None = inherit from the ExecutionContext (16 / "m*" for bare dicts)
+    concurrency: Optional[int] = None
+    default_tier: Optional[str] = None
     seed: int = 0
 
 
@@ -84,14 +86,25 @@ def sample_probabilities(costs: Sequence[float], lam: float) -> List[float]:
     return [lam / n + (1.0 - lam) * w / z for w in ws]
 
 
+def _cfg_context(backends, cfg: LogicalOptConfig) -> rt.ExecutionContext:
+    """Context for candidate evaluation: explicit cfg fields win, otherwise
+    inherit from a caller-supplied ExecutionContext."""
+    over = {}
+    if cfg.default_tier is not None:
+        over["default_tier"] = cfg.default_tier
+    if cfg.concurrency is not None:
+        over["concurrency"] = cfg.concurrency
+    return rt.as_context(backends, **over)
+
+
 def optimize(plan: plan_ir.LogicalPlan, table: Table,
-             backends: Dict[str, bk.Backend],
+             backends: "Dict[str, bk.Backend] | rt.ExecutionContext",
              rewriter=None,
              cfg: LogicalOptConfig = LogicalOptConfig()) -> OptResult:
     rng = random.Random(cfg.seed)
     rewriter = rewriter or rw.LLMSimRewriter()
-    judge = judge_mod.Judge(backends, exec_tier=cfg.default_tier,
-                            concurrency=cfg.concurrency)
+    ctx = _cfg_context(backends, cfg)
+    judge = judge_mod.Judge(ctx)   # candidate evaluation shares the context
     n_sample = min(max(int(table.n_rows * cfg.sample_ratio), cfg.sample_min),
                    cfg.sample_max, table.n_rows)
     sample = table.sample(n_sample, seed=cfg.seed)
@@ -101,8 +114,8 @@ def optimize(plan: plan_ir.LogicalPlan, table: Table,
 
     def plan_cost_of(p: plan_ir.LogicalPlan) -> float:
         return cost_mod.plan_cost(p, table.n_rows,
-                                  default_tier=cfg.default_tier,
-                                  concurrency=cfg.concurrency).cost
+                                  default_tier=ctx.default_tier,
+                                  concurrency=ctx.concurrency).cost
 
     c0 = plan_cost_of(plan)
     cands: List[Candidate] = [Candidate(plan, c0, 1.0, None, "init")]
@@ -148,7 +161,7 @@ def optimize(plan: plan_ir.LogicalPlan, table: Table,
 # ---------------------------------------------------------------------------
 
 def optimize_beam(plan: plan_ir.LogicalPlan, table: Table,
-                  backends: Dict[str, bk.Backend],
+                  backends: "Dict[str, bk.Backend] | rt.ExecutionContext",
                   rewriter=None,
                   cfg: LogicalOptConfig = LogicalOptConfig(),
                   beam_width: int = 2) -> OptResult:
@@ -156,8 +169,8 @@ def optimize_beam(plan: plan_ir.LogicalPlan, table: Table,
     baseline: ~2x the optimization cost at similar end-to-end quality)."""
     rng = random.Random(cfg.seed)
     rewriter = rewriter or rw.LLMSimRewriter()
-    judge = judge_mod.Judge(backends, exec_tier=cfg.default_tier,
-                            concurrency=cfg.concurrency)
+    ctx = _cfg_context(backends, cfg)
+    judge = judge_mod.Judge(ctx)
     n_sample = min(max(int(table.n_rows * cfg.sample_ratio), cfg.sample_min),
                    cfg.sample_max, table.n_rows)
     sample = table.sample(n_sample, seed=cfg.seed)
@@ -167,8 +180,8 @@ def optimize_beam(plan: plan_ir.LogicalPlan, table: Table,
 
     def plan_cost_of(p):
         return cost_mod.plan_cost(p, table.n_rows,
-                                  default_tier=cfg.default_tier,
-                                  concurrency=cfg.concurrency).cost
+                                  default_tier=ctx.default_tier,
+                                  concurrency=ctx.concurrency).cost
 
     c0 = plan_cost_of(plan)
     cands: List[Candidate] = [Candidate(plan, c0, 1.0, None, "init")]

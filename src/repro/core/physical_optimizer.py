@@ -11,21 +11,23 @@ The sample flows through the plan operator-by-operator with the already-
 selected backends (matching the paper's optimize-then-execute pipeline in
 Fig. 4), so downstream operators are scored on realistic inputs.
 
-Sync vs async (Table 9): call latencies are metered per backend; `sync`
-reports the sequential sum, `async` the makespan over `concurrency`
-workers — both for the optimization phase and for execution.
+Sync vs async (Table 9): every backend call lands in the meter's call log
+and is placed on the shared event-driven scheduler
+(``runtime.EventScheduler``). ``async`` runs each operator's scoring calls
+concurrently over per-tier worker pools with a barrier before the next
+operator (its sample input depends on this operator's output); ``sync``
+collapses all tiers onto one worker, i.e. the sequential sum.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional
 
 from repro.core import backends as bk
 from repro.core import executor as ex
 from repro.core import improvement as imp
 from repro.core import plan as plan_ir
-from repro.core import udf as udf_mod
+from repro.core import runtime as rt
 from repro.core.table import Table
 
 
@@ -37,8 +39,9 @@ class PhysicalOptConfig:
     sample_max: int = 64
     estimator: str = "approx"      # exact | pushdown | reuse | approx
     max_cond_eval: int = 16        # bound conditional-term evaluations
-    concurrency: int = 16          # async worker count
-    mode: str = "async"            # sync | async
+    # None = inherit from the ExecutionContext (16 / "async" for bare dicts)
+    concurrency: Optional[int] = None   # async worker count
+    mode: Optional[str] = None          # sync | async
     seed: int = 0
 
 
@@ -63,24 +66,21 @@ def select_tier(scores: Dict[str, float], delta_min: float,
     return chosen
 
 
-def _wall(meter: bk.UsageMeter, mode: str, concurrency: int) -> float:
-    total = meter.total
-    if mode == "sync":
-        return total.latency_s
-    calls = max(1, total.calls)
-    per_call = total.latency_s / calls
-    return math.ceil(calls / max(1, concurrency)) * per_call
-
-
 def optimize(plan: plan_ir.LogicalPlan, table: Table,
-             backends: Dict[str, bk.Backend],
+             backends: "Dict[str, bk.Backend] | rt.ExecutionContext",
              cfg: PhysicalOptConfig = PhysicalOptConfig()
              ) -> PhysicalOptResult:
+    ctx = rt.as_context(backends)
     n_sample = min(max(int(table.n_rows * cfg.sample_ratio), cfg.sample_min),
                    cfg.sample_max, table.n_rows)
     sample = ex.with_rowids(table.sample(n_sample, seed=cfg.seed))
 
-    meter = bk.UsageMeter()
+    meter = bk.UsageMeter()        # optimization-phase accounting only
+    sched = rt.EventScheduler(
+        cfg.concurrency if cfg.concurrency is not None else ctx.concurrency,
+        per_tier=ctx.per_tier_concurrency,
+        mode=cfg.mode if cfg.mode is not None else ctx.mode)
+    cursor = 0
     assignments: Dict[int, str] = {}
     all_scores: Dict[int, Dict[str, float]] = {}
 
@@ -93,43 +93,38 @@ def optimize(plan: plan_ir.LogicalPlan, table: Table,
         values = cur.resolve(op.input_column)
         if op.is_llm:
             res = imp.improvement_scores(
-                backends, op, values, method=cfg.estimator, meter=meter,
+                ctx.backends, op, values, method=cfg.estimator, meter=meter,
                 max_cond_eval=(cfg.max_cond_eval
                                if cfg.estimator == "approx" else None))
             tier = select_tier(res.scores, cfg.delta_min)
             assignments[k] = tier
             all_scores[k] = dict(res.scores)
+            # scoring calls for one operator run as one concurrent stage
+            cursor, _ = sched.drain(meter, cursor)
+            sched.barrier()
         # flow the sample forward using the chosen tier (or the UDF)
-        cur = _apply_op(op, cur, values, backends,
+        cur = _apply_op(op, cur, values, ctx,
                         assignments.get(k, "m1"), meter)
+        cursor, _ = sched.drain(meter, cursor)
+        sched.barrier()   # the next operator consumes this one's output
 
     tiered = plan.with_tiers(assignments)
     return PhysicalOptResult(plan=tiered, assignments=assignments,
                              scores=all_scores, meter=meter,
-                             opt_wall_s=_wall(meter, cfg.mode,
-                                              cfg.concurrency))
+                             opt_wall_s=sched.makespan)
 
 
 def _apply_op(op: plan_ir.Operator, table: Table, values,
-              backends: Dict[str, bk.Backend], tier: str,
+              ctx: rt.ExecutionContext, tier: str,
               meter: bk.UsageMeter) -> Table:
-    """Advance the optimizer's sample through one operator."""
+    """Advance the optimizer's sample through one operator (shared
+    ``runtime`` apply path — same UDF safety and bool-mask parsing as the
+    executor)."""
     if op.udf is not None:
-        compiled = udf_mod.resolve_udf(op)
-        if op.kind == plan_ir.FILTER:
-            return table.select([bool(compiled.fn(v)) for v in values])
-        if op.kind == plan_ir.MAP:
-            return table.with_column(op.output_column,
-                                     [compiled.fn(v) for v in values])
+        table, _ = rt.run_udf_op(op, table, values)
         return table
-    outs = backends[tier].run_values(op, values, meter=meter)
-    if op.kind == plan_ir.FILTER:
-        mask = [bool(o) if isinstance(o, bool) else
-                str(o).strip().lower().startswith(("true", "yes"))
-                for o in outs]
-        return table.select(mask)
-    if op.kind == plan_ir.MAP:
-        return table.with_column(op.output_column, outs)
+    outs = ctx.backends[tier].run_values(op, values, meter=meter)
+    table, _ = rt.apply_outputs(op, table, outs)
     return table
 
 

@@ -1,0 +1,310 @@
+"""Event-driven execution runtime: the single scheduling surface shared by
+the executor, the judge, and both optimizers.
+
+Three pieces:
+
+* :class:`EventScheduler` — a discrete-event makespan model. Every LLM call
+  becomes a *job* ``(tier, duration, ready_time)``; each tier owns a pool of
+  workers (paper: 16 coroutines) and a job starts on the earliest-free
+  worker of its tier, no earlier than its ready time. The resulting
+  makespan replaces the old per-operator "waves" formulas (the deleted
+  ``executor._makespan`` / ``physical_optimizer._wall``): unlike waves, the
+  event model fills ragged-wave idle slots, overlaps operators that run on
+  different tiers, and honours per-tier concurrency caps. ``mode="sync"``
+  collapses every tier onto one worker, reproducing the paper's Table-9
+  sequential accounting.
+
+* :class:`ExecutionContext` — bundles everything an execution needs
+  (backends, default tier, batch size, concurrency, morsel size,
+  :class:`OutputCache`, ``UsageMeter``) into one object threaded through
+  ``executor.execute``, ``judge.Judge``, the logical optimizer's candidate
+  evaluation, and the physical optimizer's sample flow. ``as_context``
+  upgrades a bare ``{tier: Backend}`` dict, so every public entry point
+  accepts either.
+
+* shared operator application — ``run_llm_op`` (cache-aware backend
+  dispatch), ``bool_mask`` (the one place LLM filter outputs are parsed),
+  ``apply_outputs`` and ``run_udf_op`` (the one place operator outputs
+  mutate a table). Previously the executor and the physical optimizer each
+  carried a private copy of this logic.
+
+Per-call latencies flow from the backends through ``UsageMeter.call_log``;
+schedulers consume new log entries via :meth:`EventScheduler.drain`, so any
+backend that meters itself is automatically schedulable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import backends as bk
+from repro.core import plan as plan_ir
+from repro.core import udf as udf_mod
+from repro.core.table import Table
+
+# rows per morsel in the pipelined executor; must stay a multiple of the
+# batch size so batch-prompting call counts match the barrier executor
+DEFAULT_MORSEL_ROWS = 32
+
+# cost of native (UDF) compute per row — matches the seed executor's model
+UDF_SECONDS_PER_ROW = 2e-6
+
+# pseudo-tier for host-side (UDF) compute: one Python process, one worker —
+# morsels pipeline against LLM calls but serialize against each other
+HOST_TIER = "\x00host"
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event scheduler
+# ---------------------------------------------------------------------------
+
+class EventScheduler:
+    """Per-tier worker pools + greedy earliest-free-worker placement.
+
+    ``submit`` returns the job's finish time; ``makespan`` is the latest
+    finish observed so far. ``barrier()`` forbids later jobs from starting
+    before everything already submitted has finished (the physical
+    optimizer uses it between dependent sample-flow stages).
+    """
+
+    def __init__(self, concurrency: int = 16,
+                 per_tier: Optional[Dict[str, int]] = None,
+                 mode: str = "async"):
+        if mode not in ("sync", "async"):
+            raise ValueError(f"unknown scheduler mode {mode!r}")
+        self.mode = mode
+        self.concurrency = max(1, int(concurrency))
+        self.per_tier = dict(per_tier or {})
+        self._pools: Dict[str, List[float]] = {}
+        self._makespan = 0.0
+        self._floor = 0.0
+        self.n_jobs = 0
+
+    def workers(self, tier: str) -> int:
+        if self.mode == "sync" or tier == HOST_TIER:
+            return 1
+        return max(1, int(self.per_tier.get(tier, self.concurrency)))
+
+    def _pool(self, tier: str) -> List[float]:
+        # sync mode: one global single-worker pool => pure sequential sum
+        # (host compute stays its own resource even then)
+        key = tier if (self.mode != "sync" or tier == HOST_TIER) \
+            else "\x00sync"
+        pool = self._pools.get(key)
+        if pool is None:
+            pool = [0.0] * self.workers(tier)
+            self._pools[key] = pool
+        return pool
+
+    def submit(self, tier: str, duration_s: float,
+               ready_s: float = 0.0) -> float:
+        """Schedule one job; returns its finish time."""
+        pool = self._pool(tier)
+        free = heapq.heappop(pool)
+        start = max(free, ready_s, self._floor)
+        finish = start + max(0.0, duration_s)
+        heapq.heappush(pool, finish)
+        self.n_jobs += 1
+        if finish > self._makespan:
+            self._makespan = finish
+        return finish
+
+    def barrier(self) -> float:
+        """All later jobs start no earlier than the current makespan."""
+        self._floor = self._makespan
+        return self._floor
+
+    def drain(self, meter: bk.UsageMeter, cursor: int,
+              ready_s: float = 0.0) -> Tuple[int, float]:
+        """Submit every call the meter logged since ``cursor``; returns
+        (new cursor, latest finish among the drained jobs)."""
+        log = meter.call_log
+        finish = ready_s
+        for tier, lat in log[cursor:]:
+            finish = max(finish, self.submit(tier, lat, ready_s))
+        return len(log), finish
+
+    @property
+    def makespan(self) -> float:
+        return self._makespan
+
+
+# ---------------------------------------------------------------------------
+# LLM-output cache
+# ---------------------------------------------------------------------------
+
+def _vkey(v) -> str:
+    return v if isinstance(v, str) else repr(v)
+
+
+class OutputCache:
+    """LLM-output memo keyed by (tier, op semantics, value).
+
+    Semantic operators are deterministic per (model, prompt) here, so
+    repeated sample executions — the judge runs the original plan once per
+    optimizer iteration, rewritten plans share most operators — hit the
+    cache instead of re-invoking the backend. This is the executor-level
+    analogue of the paper's computation-reuse theme (cf. QuestCache [18]);
+    only cache *misses* are billed. Keys are per-value, so morsel-pipelined
+    and barrier execution populate and hit the cache identically."""
+
+    def __init__(self):
+        self.data: Dict[tuple, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def key(self, op: plan_ir.Operator, tier: str, batch: int, v) -> tuple:
+        return (op.kind, op.instruction, op.input_column, tier, batch,
+                _vkey(v))
+
+
+def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
+               meter: bk.UsageMeter, *, batch_size: int = 1,
+               cache: Optional[OutputCache] = None):
+    """Execute one LLM operator, via the cache when provided. Returns
+    (outputs, n_calls_made, latency_of_calls_made)."""
+    before_calls = meter.calls(tier_name)
+    before_lat = meter.by_tier.get(tier_name, bk.Usage()).latency_s
+    if cache is None or op.kind == plan_ir.REDUCE:
+        if cache is not None and op.kind == plan_ir.REDUCE:
+            rkey = cache.key(op, tier_name, batch_size,
+                             "\x1e".join(_vkey(v) for v in values))
+            if rkey in cache.data:
+                cache.hits += 1
+                return [cache.data[rkey]], 0, 0.0
+            outs = backend.run_values(op, values, meter=meter,
+                                      batch_size=batch_size)
+            cache.misses += 1
+            cache.data[rkey] = outs[0]
+        else:
+            outs = backend.run_values(op, values, meter=meter,
+                                      batch_size=batch_size)
+        n_calls = meter.calls(tier_name) - before_calls
+        lat = meter.by_tier[tier_name].latency_s - before_lat
+        return outs, n_calls, lat
+
+    keys = [cache.key(op, tier_name, batch_size, v) for v in values]
+    missing = [i for i, k in enumerate(keys) if k not in cache.data]
+    cache.hits += len(values) - len(missing)
+    cache.misses += len(missing)
+    if missing:
+        outs_new = backend.run_values(op, [values[i] for i in missing],
+                                      meter=meter, batch_size=batch_size)
+        for i, o in zip(missing, outs_new):
+            cache.data[keys[i]] = o
+    n_calls = meter.calls(tier_name) - before_calls
+    lat = (meter.by_tier[tier_name].latency_s - before_lat) if missing \
+        else 0.0
+    return [cache.data[k] for k in keys], n_calls, lat
+
+
+# ---------------------------------------------------------------------------
+# Shared operator application (executor + physical-optimizer sample flow)
+# ---------------------------------------------------------------------------
+
+def bool_mask(outs) -> List[bool]:
+    """Parse LLM filter outputs into a row mask (the one shared parser)."""
+    return [o if isinstance(o, bool) else
+            str(o).strip().lower().startswith(("true", "yes"))
+            for o in outs]
+
+
+def _rank_column(sims) -> List[int]:
+    order = sorted(range(len(sims)), key=lambda i: sims[i], reverse=True)
+    ranks = [0] * len(order)
+    for r, i in enumerate(order):
+        ranks[i] = r
+    return ranks
+
+
+def apply_outputs(op: plan_ir.Operator, table: Table,
+                  outs) -> Tuple[Table, Any]:
+    """Fold one LLM operator's outputs into the table.
+
+    Returns ``(table, scalar)``; scalar is non-None only for reduce."""
+    if op.kind == plan_ir.FILTER:
+        return table.select(bool_mask(outs)), None
+    if op.kind == plan_ir.MAP:
+        return table.with_column(op.output_column, outs), None
+    if op.kind == plan_ir.REDUCE:
+        return table, outs[0]
+    sims = [(o if isinstance(o, (int, float)) else i)
+            for i, o in enumerate(outs)]
+    return table.with_column(op.output_column or "rank",
+                             _rank_column(sims), "numeric"), None
+
+
+def run_udf_op(op: plan_ir.Operator, table: Table,
+               values) -> Tuple[Table, Any]:
+    """Run one compiled-UDF operator natively (no LLM calls).
+
+    Generated UDFs are format-fragile by design (paper Fig. 12b); a row
+    that crashes one yields the kind's null answer."""
+    compiled = udf_mod.resolve_udf(op)
+
+    def safe(v, default=None):
+        try:
+            return compiled.fn(v)
+        except Exception:
+            return default
+
+    if op.kind == plan_ir.FILTER:
+        return table.select([bool(safe(v, False)) for v in values]), None
+    if op.kind == plan_ir.MAP:
+        return table.with_column(op.output_column,
+                                 [safe(v) for v in values]), None
+    if op.kind == plan_ir.REDUCE:
+        return table, safe(list(values))
+    order = safe(list(values), list(range(len(values))))
+    ranks = [0] * len(order)
+    for r, i in enumerate(order):
+        ranks[i] = r
+    return table.with_column(op.output_column or "rank", ranks,
+                             "numeric"), None
+
+
+# ---------------------------------------------------------------------------
+# Execution context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExecutionContext:
+    """Everything an execution needs, in one object.
+
+    ``concurrency`` is the default per-tier worker count;
+    ``per_tier_concurrency`` overrides it for individual tiers (a weak tier
+    served on many replicas can take more simultaneous calls than the
+    flagship). ``morsel_size=0`` disables pipelining (whole-table barrier
+    between operators — the seed executor's behaviour)."""
+    backends: Dict[str, bk.Backend]
+    default_tier: str = "m*"
+    concurrency: int = 16
+    per_tier_concurrency: Optional[Dict[str, int]] = None
+    batch_size: int = 1
+    morsel_size: int = DEFAULT_MORSEL_ROWS
+    mode: str = "async"
+    cache: Optional[OutputCache] = None
+    meter: bk.UsageMeter = dataclasses.field(default_factory=bk.UsageMeter)
+
+    def backend(self, tier_name: Optional[str]):
+        return self.backends[tier_name or self.default_tier]
+
+    def make_scheduler(self) -> EventScheduler:
+        return EventScheduler(self.concurrency,
+                              per_tier=self.per_tier_concurrency,
+                              mode=self.mode)
+
+    def fork(self, **overrides) -> "ExecutionContext":
+        """A sibling context; e.g. ``fork(meter=UsageMeter())`` gives an
+        optimizer its own accounting while sharing backends and cache."""
+        return dataclasses.replace(self, **overrides)
+
+
+def as_context(backends_or_ctx, **defaults) -> ExecutionContext:
+    """Upgrade a ``{tier: Backend}`` dict to an ExecutionContext; pass an
+    existing context through (with ``defaults`` applied as overrides)."""
+    if isinstance(backends_or_ctx, ExecutionContext):
+        return backends_or_ctx.fork(**defaults) if defaults \
+            else backends_or_ctx
+    return ExecutionContext(backends=backends_or_ctx, **defaults)

@@ -77,6 +77,19 @@ class Table:
     def head(self, n: int) -> "Table":
         return self.take(range(min(n, self.n_rows)))
 
+    @staticmethod
+    def concat(parts: Sequence["Table"]) -> "Table":
+        """Row-wise concatenation of like-schema tables (morsel merge).
+
+        All parts must share column names; modalities/blobs/name are taken
+        from the first part."""
+        if not parts:
+            raise ValueError("concat of zero tables")
+        first = parts[0]
+        cols = {c: [v for p in parts for v in p.columns[c]]
+                for c in first.columns}
+        return Table(cols, dict(first.modalities), first.blobs, first.name)
+
     def sample(self, n: int, seed: int = 0) -> "Table":
         """Deterministic row sample (optimizers validate on samples)."""
         if n >= self.n_rows:

@@ -44,6 +44,7 @@ class Request:
     slot: int = -1
     prefill_s: float = 0.0
     submitted_s: float = 0.0
+    started_s: float = 0.0      # slot insert (service start, not enqueue)
     done_s: float = 0.0
 
     @property
@@ -85,6 +86,7 @@ class GenerationEngine:
         """Prefill one request and splice it into the slot batch. Returns
         the request if it finished at prefill (prompt fills the window)."""
         t0 = time.perf_counter()
+        req.started_s = t0
         ids = self.tok.encode(req.prompt)[: self.max_len - 1]
         req.prompt_ids = ids
         req.output_ids = []

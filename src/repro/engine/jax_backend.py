@@ -54,13 +54,23 @@ class JAXBackend:
         finished = batcher.run()
         raw = [finished[r].text for r in rids]
 
-        wall = time.perf_counter() - t0
+        wall = time.perf_counter() - t0  # noqa: F841 — true batch wall
         tok_in = sum(cost_mod.text_tokens(p) for p in prompts)
         tok_out = sum(len(finished[r].output_ids or []) for r in rids)
         if meter is not None:
+            # per-call latencies are the *measured* per-request SERVICE
+            # times (slot insert -> done) from the continuous batcher; the
+            # event scheduler re-queues jobs itself, so sojourn time
+            # (submit -> done) would double-count the slot-queue wait
+            per_call = [max(0.0, finished[r].done_s
+                            - (finished[r].started_s
+                               or finished[r].submitted_s))
+                        for r in rids]
             meter.record(self.tier.name, bk.Usage(
                 calls=len(prompts), tok_in=tok_in, tok_out=tok_out,
-                usd=self.tier.usd(tok_in, tok_out), latency_s=wall))
+                usd=self.tier.usd(tok_in, tok_out),
+                latency_s=sum(per_call)),
+                per_call_latency_s=per_call)
 
         if self.oracle is not None:
             if op.kind == plan_ir.REDUCE:

@@ -1,0 +1,29 @@
+"""Version-compat shims for jax API drift.
+
+Two renames moved under this roof so kernel/model code stays version-clean:
+
+* Pallas-TPU compiler params: newer jax exposes
+  ``pltpu.CompilerParams``; 0.4.x calls it ``pltpu.TPUCompilerParams``.
+* ``shard_map``: newer jax promotes it to ``jax.shard_map`` (keyword
+  ``check_vma``); 0.4.x ships it as
+  ``jax.experimental.shard_map.shard_map`` (keyword ``check_rep``).
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+if hasattr(jax, "shard_map"):
+    _shard_map, _CHECK_KW = jax.shard_map, "check_vma"
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` signature, runnable on 0.4.x jax."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: check_vma})

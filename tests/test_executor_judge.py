@@ -75,9 +75,13 @@ def test_batch_prompting_reduces_calls_and_quality(movie_small):
 
 
 def test_makespan_concurrency():
-    assert ex._makespan(16.0, 16, 16) == pytest.approx(1.0)
-    assert ex._makespan(16.0, 16, 4) == pytest.approx(4.0)
-    assert ex._makespan(16.0, 16, 1) == pytest.approx(16.0)
+    """16 homogeneous 1s calls over W workers (was the waves formula)."""
+    from repro.core import runtime as rt
+    for workers, want in ((16, 1.0), (4, 4.0), (1, 16.0)):
+        sched = rt.EventScheduler(concurrency=workers)
+        for _ in range(16):
+            sched.submit("m*", 1.0)
+        assert sched.makespan == pytest.approx(want)
 
 
 # ---------------------------------------------------------------------------

@@ -14,7 +14,11 @@ hypothesis-generated response patterns. Invariants:
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the optional hypothesis dep "
+    "(pip install .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import backends as bk
 from repro.core import cost as cost_mod

@@ -1,0 +1,281 @@
+"""Event-driven runtime: scheduler semantics, morsel pipelining, context
+threading, cache behaviour under pipelining."""
+import pytest
+
+from repro.core import backends as bk
+from repro.core import executor as ex
+from repro.core import judge as judge_mod
+from repro.core import logical_optimizer as lopt
+from repro.core import physical_optimizer as popt
+from repro.core import plan as P
+from repro.core import runtime as rt
+from repro.core.cost import TierSpec
+from repro.data import load_dataset
+
+from conftest import perfect_backends
+
+
+@pytest.fixture(scope="module")
+def movie_small():
+    return load_dataset("movie", max_rows=48)
+
+
+def unit_latency_backends(oracle):
+    """Always-correct two-tier cascade where every call takes exactly 1s
+    (latency_call_s=1, latency_tok_s=0) — makes schedules hand-computable."""
+    return {
+        "m1": bk.SimulatedBackend(TierSpec("m1", 1.01, 0.1, 0.4, 1.0, 0.0),
+                                  oracle, violation_rate=0.0),
+        "m*": bk.SimulatedBackend(TierSpec("m*", 1.01, 2.0, 8.0, 1.0, 0.0),
+                                  oracle, violation_rate=0.0),
+    }
+
+
+# ---------------------------------------------------------------------------
+# EventScheduler
+# ---------------------------------------------------------------------------
+
+def test_scheduler_hand_computed_schedule():
+    s = rt.EventScheduler(concurrency=2)
+    assert s.submit("t", 3.0) == 3.0        # worker 1: [0, 3]
+    assert s.submit("t", 1.0) == 1.0        # worker 2: [0, 1]
+    assert s.submit("t", 1.0) == 2.0        # worker 2: [1, 2]
+    assert s.submit("t", 1.0) == 3.0        # worker 2: [2, 3]
+    assert s.makespan == 3.0
+    # ready time delays the start past the free worker
+    assert s.submit("t", 2.0, ready_s=4.0) == 6.0
+    assert s.makespan == 6.0
+
+
+def test_scheduler_per_tier_pools_are_independent():
+    s = rt.EventScheduler(concurrency=4)
+    for _ in range(4):
+        s.submit("a", 1.0)
+    for _ in range(4):
+        s.submit("b", 1.0)
+    # different tiers do not contend: both finish in one wave
+    assert s.makespan == 1.0
+
+
+def test_scheduler_per_tier_concurrency_caps():
+    s = rt.EventScheduler(concurrency=4, per_tier={"m*": 1})
+    for _ in range(4):
+        s.submit("m1", 1.0)
+    assert s.makespan == 1.0                # m1: 4 workers
+    for _ in range(4):
+        s.submit("m*", 1.0)
+    assert s.makespan == 4.0                # m*: capped at 1 worker
+
+
+def test_scheduler_sync_mode_is_sequential_sum():
+    s = rt.EventScheduler(concurrency=16, mode="sync")
+    for tier, d in (("a", 1.0), ("b", 2.0), ("a", 3.0)):
+        s.submit(tier, d)
+    assert s.makespan == 6.0                # one global worker
+
+
+def test_scheduler_barrier_floors_later_jobs():
+    s = rt.EventScheduler(concurrency=4)
+    s.submit("t", 2.0)
+    s.barrier()
+    assert s.submit("t", 1.0) == 3.0        # cannot start before 2.0
+
+
+def test_scheduler_drains_meter_call_log(movie_small):
+    table, oracle = movie_small
+    backends = unit_latency_backends(oracle)
+    meter = bk.UsageMeter()
+    op = P.Operator(P.FILTER, "The rating is higher than 8.", "IMDB_rating")
+    backends["m1"].run_values(op, table.column("IMDB_rating")[:6],
+                              meter=meter)
+    assert len(meter.call_log) == 6
+    assert all(t == "m1" and lat == pytest.approx(1.0)
+               for t, lat in meter.call_log)
+    s = rt.EventScheduler(concurrency=3)
+    cursor, finish = s.drain(meter, 0)
+    assert cursor == 6 and finish == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# Morsel-driven execution
+# ---------------------------------------------------------------------------
+
+def _chain_plan(filter_tier=None, map_tier=None):
+    return P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 1.", "IMDB_rating",
+                   tier=filter_tier),
+        P.Operator(P.MAP, "According to the movie plot, extract the "
+                   "genre(s) of each movie.", "Plot", "Genre",
+                   tier=map_tier),
+    ))
+
+
+def test_morsel_results_and_meter_match_barrier(movie_small):
+    table, oracle = movie_small
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 8.", "IMDB_rating"),
+        P.Operator(P.MAP, "According to the movie plot, extract the "
+                   "genre(s) of each movie.", "Plot", "Genre"),
+        P.Operator(P.REDUCE, "Count the number of movies.", "Title"),
+    ))
+    runs = {}
+    for name, morsel in (("barrier", 0), ("morsel", 8)):
+        backends = bk.make_backends(oracle)
+        runs[name] = ex.execute(plan, table, backends, default_tier="m*",
+                                morsel_size=morsel)
+    a, b = runs["barrier"], runs["morsel"]
+    assert a.scalar == b.scalar
+    assert a.rows_processed == b.rows_processed
+    ta, tb = a.meter.total, b.meter.total
+    assert ta.calls == tb.calls
+    assert ta.tok_in == pytest.approx(tb.tok_in)
+    assert ta.tok_out == pytest.approx(tb.tok_out)
+    assert ta.usd == pytest.approx(tb.usd)
+    assert ta.latency_s == pytest.approx(tb.latency_s)
+
+
+def test_morsel_table_outputs_match_barrier(movie_small):
+    table, oracle = movie_small
+    plan = _chain_plan()
+    backends = bk.make_backends(oracle)
+    a = ex.execute(plan, table, backends, morsel_size=0)
+    b = ex.execute(plan, table, backends, morsel_size=8)
+    assert a.table.columns[ex.ROWID] == b.table.columns[ex.ROWID]
+    assert a.table.columns["Genre"] == b.table.columns["Genre"]
+
+
+def test_filter_map_chain_pipelines_below_barrier(movie_small):
+    """The ISSUE-1 acceptance schedule: filter (m1) -> map (m*) over 48
+    rows, 4 workers per tier, 1s calls. Barrier: 12s filter + 12s map =
+    24s. Morsels of 8: map morsel k starts as soon as filter morsel k is
+    done (2k seconds), so the chain drains at 14s."""
+    table, oracle = movie_small
+    backends = unit_latency_backends(oracle)
+    plan = _chain_plan(filter_tier="m1", map_tier="m*")
+
+    barrier = ex.execute(plan, table, backends, concurrency=4,
+                         morsel_size=0)
+    morsel = ex.execute(plan, table, backends, concurrency=4,
+                        morsel_size=8)
+    assert barrier.wall_s == pytest.approx(24.0)
+    assert morsel.wall_s == pytest.approx(14.0)
+    assert morsel.wall_s < barrier.wall_s
+    # identical answers either way
+    assert morsel.table.columns["Genre"] == barrier.table.columns["Genre"]
+
+
+def test_same_tier_chain_never_slower_than_barrier(movie_small):
+    """With both operators contending for one tier's pool the pipeline is
+    work-bound, but morsel scheduling must never lose to the barrier."""
+    table, oracle = movie_small
+    backends = unit_latency_backends(oracle)
+    plan = _chain_plan(filter_tier="m*", map_tier="m*")
+    for conc in (4, 5, 16):
+        barrier = ex.execute(plan, table, backends, concurrency=conc,
+                             morsel_size=0)
+        morsel = ex.execute(plan, table, backends, concurrency=conc,
+                            morsel_size=8)
+        assert morsel.wall_s <= barrier.wall_s
+
+
+def test_reduce_is_a_pipeline_barrier(movie_small):
+    table, oracle = movie_small
+    backends = perfect_backends(oracle)
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 8.", "IMDB_rating"),
+        P.Operator(P.REDUCE, "Count the number of movies.", "Title"),
+    ))
+    got = ex.execute(plan, table, backends, morsel_size=8).value()
+    want = sum(1 for r in table.column("IMDB_rating") if float(r) > 8)
+    assert got == want
+
+
+def test_cache_semantics_under_pipelining(movie_small):
+    """Cache keys are per-value, so barrier and morsel runs share hits;
+    a fully-cached pipelined run makes zero calls and has zero makespan."""
+    table, oracle = movie_small
+    backends = bk.make_backends(oracle)
+    plan = _chain_plan()
+    cache = rt.OutputCache()
+    m1 = bk.UsageMeter()
+    ex.execute(plan, table, backends, cache=cache, meter=m1, morsel_size=0)
+    misses_after_first = cache.misses
+    m2 = bk.UsageMeter()
+    r2 = ex.execute(plan, table, backends, cache=cache, meter=m2,
+                    morsel_size=8)
+    assert m2.total.calls == 0
+    assert r2.wall_s == 0.0
+    assert cache.misses == misses_after_first
+    assert cache.hits >= table.n_rows
+
+
+def test_batch_prompting_call_counts_survive_morselling(movie_small):
+    """Full morsels are multiples of the batch size, so batched call
+    counts match the barrier executor: sum(ceil(s_i/b)) == ceil(n/b)."""
+    table, oracle = movie_small
+    op = P.Operator(P.FILTER, "The movie is directed by Christopher "
+                    "Nolan.", "Director")
+    plan = P.LogicalPlan((op,))
+    for batch in (3, 4):
+        counts = {}
+        for name, morsel in (("barrier", 0), ("morsel", 8)):
+            backends = bk.make_backends(oracle)
+            meter = bk.UsageMeter()
+            ex.execute(plan, table, backends, batch_size=batch,
+                       meter=meter, morsel_size=morsel)
+            counts[name] = meter.total.calls
+        assert counts["morsel"] == counts["barrier"] \
+            == -(-table.n_rows // batch)
+
+
+# ---------------------------------------------------------------------------
+# ExecutionContext threading
+# ---------------------------------------------------------------------------
+
+def test_context_threads_executor_judge_and_optimizers(movie_small):
+    table, oracle = movie_small
+    ctx = rt.ExecutionContext(backends=perfect_backends(oracle),
+                              default_tier="m*", concurrency=8)
+    plan = _chain_plan()
+    res = ex.execute(plan, table, ctx)
+    assert res.meter is ctx.meter
+    assert res.table.n_rows == table.n_rows   # threshold-1 filter keeps all
+
+    j = judge_mod.Judge(ctx)
+    assert j.rate(plan, plan, table.sample(8)).rating == pytest.approx(1.0)
+
+    # optimizers need the full four-tier cascade
+    cascade = rt.ExecutionContext(backends=bk.make_backends(oracle),
+                                  default_tier="m*", concurrency=8)
+    pres = popt.optimize(plan, table, cascade,
+                         cfg=popt.PhysicalOptConfig(estimator="approx"))
+    assert set(pres.assignments) == {0, 1}
+    assert pres.opt_wall_s > 0.0
+
+    lres = lopt.optimize(plan, table, cascade,
+                         cfg=lopt.LogicalOptConfig(n_iterations=1))
+    assert lres.best_cost <= lres.initial_cost
+
+
+def test_per_tier_concurrency_through_context(movie_small):
+    table, oracle = movie_small
+    backends = unit_latency_backends(oracle)
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 1.",
+                   "IMDB_rating"),))
+    wide = rt.ExecutionContext(backends=backends, concurrency=16)
+    narrow = rt.ExecutionContext(backends=backends, concurrency=16,
+                                 per_tier_concurrency={"m*": 1})
+    w = ex.execute(plan, table, wide)
+    n = ex.execute(plan, table, narrow)
+    assert w.wall_s == pytest.approx(3.0)          # ceil(48/16) waves
+    assert n.wall_s == pytest.approx(float(table.n_rows))
+
+
+def test_sync_mode_context_matches_latency_sum(movie_small):
+    table, oracle = movie_small
+    backends = unit_latency_backends(oracle)
+    plan = _chain_plan(filter_tier="m1", map_tier="m*")
+    ctx = rt.ExecutionContext(backends=backends, mode="sync")
+    res = ex.execute(plan, table, ctx)
+    assert res.wall_s == pytest.approx(ctx.meter.total.latency_s)
