@@ -45,6 +45,25 @@ ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
 GPT_CONTEXT_LIMIT = 128_000
 LLAVA_PIXEL_LIMIT = 178_956_970
 
+# execution driver for every system analog: "simulated" (event-model wall,
+# deterministic — the default every table in the paper is reproduced with)
+# or "threads" (real per-tier worker pools, measured wall).
+# ``benchmarks.run --driver`` overrides it process-wide.
+DRIVER = "simulated"
+
+
+def set_driver(name: str) -> None:
+    global DRIVER
+    if name not in rt.DRIVERS:
+        raise ValueError(f"unknown driver {name!r} (expected {rt.DRIVERS})")
+    DRIVER = name
+
+
+def add_driver_arg(ap) -> None:
+    ap.add_argument("--driver", choices=rt.DRIVERS, default=None,
+                    help="execution driver for all system analogs "
+                         "(default: simulated)")
+
 
 def env(dataset: str, max_rows: int = 0, violation_rate: float = 0.03,
         seed: int = 0):
@@ -102,14 +121,16 @@ class RunResult:
 
 def run_nirvana(q, table, backends, perfect, *, logical=True, physical=True,
                 rules=None, estimator="approx", n_iterations=3, seed=0,
-                rewriter=None, batch_size=1, concurrency=16) -> RunResult:
+                rewriter=None, batch_size=1, concurrency=16,
+                driver=None) -> RunResult:
     plan = q.plan_for(table)
     truth = truth_of(plan, table, perfect)
     # one ExecutionContext for the whole pipeline (optimizers meter their
     # own phases; the final execution bills into ctx.meter)
     ctx = rt.ExecutionContext(backends=backends, default_tier="m*",
                               concurrency=concurrency,
-                              batch_size=batch_size)
+                              batch_size=batch_size,
+                              driver=driver or DRIVER)
     opt_wall = opt_usd = 0.0
     lres = pres = None
     if logical:
@@ -161,7 +182,7 @@ def run_palimpzest_analog(q, table, backends, perfect) -> RunResult:
         plan = oc.plan
     run = ex.execute(plan, table,
                      rt.ExecutionContext(backends=backends,
-                                         default_tier="m*"))
+                                         default_tier="m*", driver=DRIVER))
     return RunResult("palimpzest", table.name, q.qid, q.size,
                      run.wall_s, run.meter.total.usd,
                      answer_correct(run.value(), truth),
@@ -174,7 +195,8 @@ def run_lotus_analog(q, table, backends, perfect) -> RunResult:
     as physical optimization with the exact estimator and no rewrites."""
     plan = q.plan_for(table)
     truth = truth_of(plan, table, perfect)
-    ctx = rt.ExecutionContext(backends=backends, default_tier="m*")
+    ctx = rt.ExecutionContext(backends=backends, default_tier="m*",
+                              driver=DRIVER)
     pres = popt.optimize(plan, table, ctx,
                          cfg=popt.PhysicalOptConfig(estimator="exact"))
     run = ex.execute(pres.plan, table, ctx)
@@ -197,7 +219,7 @@ def run_tablerag_analog(q, table, backends, perfect, k: int = 50
     sub = table.head(k)
     run = ex.execute(plan, sub,
                      rt.ExecutionContext(backends=backends,
-                                         default_tier="m1"))
+                                         default_tier="m1", driver=DRIVER))
     got = run.value()
     correct = answer_correct(got, truth)
     return RunResult("tablerag", table.name, q.qid, q.size,

@@ -12,6 +12,7 @@ import sys
 import time
 import traceback
 
+from benchmarks import common
 from benchmarks import (appendix_d_search, fig9_fig10_breakdown,
                         fig13_cardinality, fig14_batch_prompting,
                         roofline_report, table2_capability,
@@ -49,7 +50,10 @@ def main(argv=None):
                     help="smaller datasets / fewer samples")
     ap.add_argument("--only", default="",
                     help="run a single benchmark by name substring")
+    common.add_driver_arg(ap)
     args = ap.parse_args(argv)
+    if args.driver:
+        common.set_driver(args.driver)
 
     summary = []
     n_fail = 0

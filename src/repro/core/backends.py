@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from typing import Any, Dict, List, Optional, Protocol, Sequence
 
 from repro.core import cost as cost_mod
@@ -61,30 +62,44 @@ class UsageMeter:
     to place each call on a simulated worker, so wall-clock accounting is
     per-call rather than per-operator-wave. Backends that know their true
     per-call latencies pass them explicitly; otherwise the aggregate
-    latency is split uniformly across the calls."""
+    latency is split uniformly across the calls.
+
+    ``record`` is lock-protected: under the threaded execution driver
+    (``runtime.ThreadPoolDispatcher``) concurrent backend calls bill into
+    one shared meter, and totals must match the sequential driver's."""
 
     def __init__(self):
         self.by_tier: Dict[str, Usage] = {}
         self.call_log: List[tuple] = []      # (tier_name, latency_s)
+        self._lock = threading.Lock()
 
     def record(self, tier_name: str, usage: Usage,
                per_call_latency_s: Optional[Sequence[float]] = None):
-        self.by_tier.setdefault(tier_name, Usage()).add(usage)
         if per_call_latency_s is None and usage.calls > 0:
             per_call_latency_s = [usage.latency_s / usage.calls] \
                 * usage.calls
-        for lat in per_call_latency_s or ():
-            self.call_log.append((tier_name, lat))
+        with self._lock:
+            self.by_tier.setdefault(tier_name, Usage()).add(usage)
+            for lat in per_call_latency_s or ():
+                self.call_log.append((tier_name, lat))
 
     @property
     def total(self) -> Usage:
         t = Usage()
-        for u in self.by_tier.values():
-            t.add(u)
+        with self._lock:
+            for u in self.by_tier.values():
+                t.add(u)
         return t
 
     def calls(self, tier_name: str) -> int:
-        return self.by_tier.get(tier_name, Usage()).calls
+        with self._lock:
+            u = self.by_tier.get(tier_name)
+            return u.calls if u is not None else 0
+
+    def latency(self, tier_name: str) -> float:
+        with self._lock:
+            u = self.by_tier.get(tier_name)
+            return u.latency_s if u is not None else 0.0
 
 
 class Backend(Protocol):

@@ -108,7 +108,8 @@ class SemanticDataFrame:
                 lcfg: Optional[lopt.LogicalOptConfig] = None,
                 pcfg: Optional[popt.PhysicalOptConfig] = None,
                 concurrency: int = 16,
-                default_tier: str = "m*") -> QueryReport:
+                default_tier: str = "m*",
+                driver: str = "simulated") -> QueryReport:
         plan = self.plan()
         plan.validate()
 
@@ -120,7 +121,8 @@ class SemanticDataFrame:
         else:
             ctx = rt.ExecutionContext(backends=backends,
                                       default_tier=default_tier,
-                                      concurrency=concurrency)
+                                      concurrency=concurrency,
+                                      driver=driver)
 
         lres = None
         if logical:

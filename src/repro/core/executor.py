@@ -5,24 +5,33 @@ LLM operators dispatch to the backend tier assigned by the physical plan
 (default tier when unassigned — the paper uses the strongest model as the
 default backbone).
 
-Execution wall-clock is *simulated* through the shared event-driven
-scheduler (``runtime.EventScheduler``): every backend call reports its
-latency into the meter's call log and is placed on the earliest-free worker
-of its tier. The table is split into row **morsels** so operators pipeline:
-a downstream map starts on rows an upstream filter has already passed
-instead of waiting for the whole column (``morsel_size=0`` restores the
-per-operator barrier). Reduce and rank are pipeline barriers — they need
-every surviving row.
+The table is split into row **morsels** so operators pipeline: a downstream
+map starts on rows an upstream filter has already passed instead of waiting
+for the whole column (``morsel_size=0`` restores the per-operator barrier).
+Reduce and rank are pipeline barriers — they need every surviving row.
+
+*How* morsels run is the execution context's **driver**
+(``runtime.Dispatcher``):
+
+* ``driver="simulated"`` — backend calls execute inline; every call reports
+  its latency into the meter's call log and is placed on the earliest-free
+  worker of its tier by the event scheduler. ``wall_s`` is the modeled
+  makespan (deterministic; Table-9 accounting).
+* ``driver="threads"`` — backend calls run on per-tier bounded worker
+  pools and morsel chains advance concurrently, so independent operators'
+  morsels genuinely overlap. ``wall_s`` is **measured** wall time.
 
 Monetary cost comes from tier token prices; both axes accumulate in a
 UsageMeter so benchmarks can break costs down per model tier (paper
-Fig. 10). Morsel pipelining changes only the schedule — results, call
-counts, and meter totals are identical to barrier execution (with the
-default ``batch_size=1``; larger batches fill within morsels).
+Fig. 10). Neither morsel pipelining nor the driver changes the answer —
+results, call counts, and per-tier meter totals are identical across
+barrier/morsel and simulated/threaded execution (with the default
+``batch_size=1``; larger batches fill within morsels).
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, List, Optional, Tuple
 
@@ -47,15 +56,19 @@ def with_rowids(table: Table) -> Table:
 @dataclasses.dataclass
 class ExecutionResult:
     table: Optional[Table]          # surviving rows (None after reduce)
-    scalar: Any                     # reduce output (None otherwise)
+    scalar: Any                     # reduce output (None unless is_reduce)
     meter: bk.UsageMeter
-    wall_s: float                   # simulated wall-clock (event-scheduled)
+    wall_s: float                   # simulated (event-model) or measured
     cpu_s: float                    # real python time spent
     rows_processed: float = 0.0     # LLM-processed records (Fig. 13 metric)
+    # whether the plan ended in a reduce — carried explicitly because a
+    # crashed/unanswerable reduce legitimately yields ``scalar=None`` and
+    # sniffing ``scalar is not None`` would misclassify the query's kind
+    is_reduce: bool = False
 
     def value(self):
         """The query answer: reduce scalar, else the surviving table."""
-        return self.scalar if self.scalar is not None else self.table
+        return self.scalar if self.is_reduce else self.table
 
 
 def _split_morsels(table: Table, morsel_size: int,
@@ -84,7 +97,9 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
             cache: Optional[OutputCache] = None,
             meter: Optional[bk.UsageMeter] = None,
             morsel_size: Optional[int] = None,
-            scheduler: Optional[rt.EventScheduler] = None
+            driver: Optional[str] = None,
+            scheduler: Optional[rt.EventScheduler] = None,
+            dispatcher: Optional[rt.Dispatcher] = None
             ) -> ExecutionResult:
     """Execute ``plan`` over ``table``.
 
@@ -92,93 +107,108 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
     the keyword arguments then configure the run, with the
     ``ExecutionContext`` field defaults filling the gaps) or a
     :class:`runtime.ExecutionContext` (every keyword argument given here
-    overrides the matching context field). A caller-supplied ``scheduler``
+    overrides the matching context field). A caller-supplied ``dispatcher``
     shares its worker pools across executions — the judge overlaps both
     sample runs on one pool this way — and ``wall_s`` then reports the
-    scheduler's cumulative makespan.
+    dispatcher's cumulative makespan. ``scheduler`` is the legacy form of
+    the same: it is wrapped in a :class:`runtime.SimulatedDispatcher`.
     """
     t0 = time.perf_counter()
     over = {k: v for k, v in (("default_tier", default_tier),
                               ("concurrency", concurrency),
                               ("batch_size", batch_size),
                               ("cache", cache), ("meter", meter),
-                              ("morsel_size", morsel_size))
+                              ("morsel_size", morsel_size),
+                              ("driver", driver))
             if v is not None}
     ctx = rt.as_context(backends, **over)
+
+    owns_dispatcher = dispatcher is None
+    if dispatcher is None:
+        dispatcher = rt.SimulatedDispatcher(scheduler) \
+            if scheduler is not None else ctx.make_dispatcher()
+    try:
+        return _run(plan, table, ctx, dispatcher, t0)
+    finally:
+        if owns_dispatcher:
+            dispatcher.close()
+
+
+def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
+         disp: rt.Dispatcher, t0: float) -> ExecutionResult:
     meter = ctx.meter
-    sched = scheduler if scheduler is not None else ctx.make_scheduler()
-
     table = with_rowids(table)
-    parts = _split_morsels(table, ctx.morsel_size, ctx.batch_size)
+    parts = [disp.done(t) for t, _ in
+             _split_morsels(table, ctx.morsel_size, ctx.batch_size)]
     scalar = None
-    rows_processed = 0.0
+    is_reduce = False
+    rows_lock = threading.Lock()
+    rows_processed = [0.0]
 
-    def llm_calls(op, tbl, values, ready):
-        """Dispatch one operator over one morsel; schedule its calls."""
-        nonlocal rows_processed
+    def llm_calls(op, values, ready):
+        """Dispatch one operator over one morsel's values."""
         backend = ctx.backend(op.tier)
         # account under the backend's own tier name (a dict key like "m*"
         # may map to a differently-named backend, e.g. a JAXBackend tier)
-        cursor = len(meter.call_log)
-        outs, _, _ = rt.run_llm_op(op, values, backend, backend.tier.name,
-                                   meter, batch_size=ctx.batch_size,
-                                   cache=ctx.cache)
-        _, finish = sched.drain(meter, cursor, ready_s=ready)
-        rows_processed += len(values)
+        outs, finish = disp.run_llm(op, values, backend, backend.tier.name,
+                                    meter, batch_size=ctx.batch_size,
+                                    cache=ctx.cache, ready_s=ready)
+        with rows_lock:
+            rows_processed[0] += len(values)
         return outs, finish
+
+    def step(op, tbl, ready):
+        """Advance one morsel through one streamable (filter/map) operator;
+        runs on a chain-pool thread under the threaded driver."""
+        if tbl.n_rows == 0:
+            # an upstream filter emptied this morsel: maps must still
+            # define their output column (downstream reads it)
+            if op.kind == plan_ir.MAP:
+                tbl = tbl.with_column(op.output_column, [])
+            return tbl, ready
+        values = tbl.resolve(op.input_column)
+        if op.udf is not None:
+            # host UDF morsels pipeline against LLM work but serialize
+            # against each other (one Python process)
+            (out_tbl, _), finish = disp.run_host(
+                lambda: rt.run_udf_op(op, tbl, values), tbl.n_rows,
+                ready_s=ready)
+            return out_tbl, finish
+        outs, finish = llm_calls(op, values, ready)
+        out_tbl, _ = rt.apply_outputs(op, tbl, outs)
+        return out_tbl, finish
 
     for op in plan.ops:
         if op.kind in (plan_ir.REDUCE, plan_ir.RANK):
             # pipeline barrier: needs every surviving row
-            tbl, ready = _merge(parts)
+            tbl, ready = _merge([p.result() for p in parts])
             if op.kind == plan_ir.RANK and tbl.n_rows == 0:
-                parts = [(tbl, ready)]
+                parts = [disp.done(tbl, ready)]
                 continue
             values = tbl.columns.get(op.input_column, []) \
                 if tbl.n_rows == 0 else tbl.resolve(op.input_column)
             if op.udf is not None:
-                finish = sched.submit(rt.HOST_TIER,
-                                      tbl.n_rows * rt.UDF_SECONDS_PER_ROW,
-                                      ready_s=ready)
-                tbl, out = rt.run_udf_op(op, tbl, values)
-                if op.kind == plan_ir.REDUCE:
-                    scalar = out
+                (tbl, out), finish = disp.run_host(
+                    lambda t=tbl, v=values: rt.run_udf_op(op, t, v),
+                    tbl.n_rows, ready_s=ready)
             else:
-                outs, finish = llm_calls(op, tbl, values, ready)
+                outs, finish = llm_calls(op, values, ready)
                 tbl, out = rt.apply_outputs(op, tbl, outs)
-                if op.kind == plan_ir.REDUCE:
-                    scalar = out
+            if op.kind == plan_ir.REDUCE:
+                scalar = out
+                is_reduce = True
             # everything downstream restarts from the barrier's output
-            parts = _split_morsels(tbl, ctx.morsel_size, ctx.batch_size)
-            parts = [(t, finish) for t, _ in parts]
+            parts = [disp.done(t, finish) for t, _ in
+                     _split_morsels(tbl, ctx.morsel_size, ctx.batch_size)]
             continue
 
         # streamable operator (filter / map): advance each morsel
-        new_parts: List[Tuple[Table, float]] = []
-        for tbl, ready in parts:
-            if tbl.n_rows == 0:
-                # an upstream filter emptied this morsel: maps must still
-                # define their output column (downstream reads it)
-                if op.kind == plan_ir.MAP:
-                    tbl = tbl.with_column(op.output_column, [])
-                new_parts.append((tbl, ready))
-                continue
-            values = tbl.resolve(op.input_column)
-            if op.udf is not None:
-                # host UDF morsels pipeline against LLM work but serialize
-                # against each other (one Python process)
-                finish = sched.submit(rt.HOST_TIER,
-                                      tbl.n_rows * rt.UDF_SECONDS_PER_ROW,
-                                      ready_s=ready)
-                tbl, _ = rt.run_udf_op(op, tbl, values)
-            else:
-                outs, finish = llm_calls(op, tbl, values, ready)
-                tbl, _ = rt.apply_outputs(op, tbl, outs)
-            new_parts.append((tbl, finish))
-        parts = new_parts
+        parts = [disp.defer(p, lambda tbl, ready, op=op: step(op, tbl, ready))
+                 for p in parts]
 
-    out_table, _ = _merge(parts)
+    out_table, _ = _merge([p.result() for p in parts])
     return ExecutionResult(
-        table=None if scalar is not None else out_table,
-        scalar=scalar, meter=meter, wall_s=sched.makespan,
-        cpu_s=time.perf_counter() - t0, rows_processed=rows_processed)
+        table=None if is_reduce else out_table,
+        scalar=scalar, meter=meter, wall_s=disp.wall_s,
+        cpu_s=time.perf_counter() - t0, rows_processed=rows_processed[0],
+        is_reduce=is_reduce)

@@ -34,21 +34,29 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core import backends as bk
 from repro.core import plan as plan_ir
+from repro.core import runtime as rt
 from repro.core import semhash
 
 TIERS4 = ("m1", "m2", "m3", "m*")
 
 
 class OutputStore:
-    """Lazy, memoized per-(tier, record) model outputs + equality cache."""
+    """Lazy, memoized per-(tier, record) model outputs + equality cache.
+
+    With a ``dispatcher`` (``runtime.Dispatcher``), each tier sweep's
+    per-record calls fan out over the tier's worker pool — under the
+    threaded driver the scoring calls of one ``ensure`` genuinely overlap
+    (the simulated dispatcher's fanout is None, i.e. inline)."""
 
     def __init__(self, backends: Dict[str, bk.Backend],
                  op: plan_ir.Operator, values: Sequence,
-                 meter: Optional[bk.UsageMeter] = None):
+                 meter: Optional[bk.UsageMeter] = None,
+                 dispatcher: Optional["rt.Dispatcher"] = None):
         self.backends = backends
         self.op = op
         self.values = list(values)
         self.meter = meter if meter is not None else bk.UsageMeter()
+        self.dispatcher = dispatcher
         self._out: Dict[str, Dict[int, object]] = {t: {} for t in backends}
         self._eq: Dict[tuple, bool] = {}
 
@@ -60,8 +68,12 @@ class OutputStore:
         missing = [i for i in idxs if i not in self._out[tier]]
         if not missing:
             return
-        outs = self.backends[tier].run_values(
-            self.op, [self.values[i] for i in missing], meter=self.meter)
+        backend = self.backends[tier]
+        fan = self.dispatcher.fanout(backend.tier.name) \
+            if self.dispatcher is not None else None
+        outs = rt.run_backend_calls(
+            self.op, [self.values[i] for i in missing], backend,
+            self.meter, batch_size=1, fanout=fan)
         for i, o in zip(missing, outs):
             self._out[tier][i] = o
 
@@ -238,9 +250,11 @@ def improvement_scores(backends: Dict[str, bk.Backend],
                        op: plan_ir.Operator, values: Sequence,
                        method: str = "approx",
                        meter: Optional[bk.UsageMeter] = None,
-                       max_cond_eval: Optional[int] = None
+                       max_cond_eval: Optional[int] = None,
+                       dispatcher: Optional["rt.Dispatcher"] = None
                        ) -> ImprovementResult:
-    store = OutputStore(backends, op, values, meter=meter)
+    store = OutputStore(backends, op, values, meter=meter,
+                        dispatcher=dispatcher)
     if method == "approx":
         return improvement_approx(store, max_cond_eval=max_cond_eval)
     return ESTIMATORS[method](store)

@@ -91,9 +91,10 @@ class Judge:
     Sample executions share an :class:`executor.OutputCache` across
     ratings: the original plan is billed once, and rewritten plans only pay
     for operators the rewrite actually changed. Both sample executions of a
-    rating run against **one** event scheduler, so they overlap on the same
-    worker pool (the paper's 16 coroutines serve the verifier too) instead
-    of being accounted back-to-back."""
+    rating run against **one** dispatcher, so they share the same worker
+    pool (the paper's 16 coroutines serve the verifier too) — simulated or
+    real threads, per the context's ``driver`` — instead of being
+    accounted back-to-back."""
     backends: "Dict[str, bk.Backend] | rt.ExecutionContext"
     judge_tier: str = "m*"          # the tier priced for the rating call
     exec_tier: str = "m*"           # backend used to execute sample plans
@@ -116,13 +117,19 @@ class Judge:
              meter: Optional[bk.UsageMeter] = None) -> JudgeResult:
         meter = meter if meter is not None else bk.UsageMeter()
         rctx = self.ctx.fork(meter=meter)
-        sched = rctx.make_scheduler()
-        ra = ex.execute(original, sample, rctx, scheduler=sched)
-        rb = ex.execute(rewritten, sample, rctx, scheduler=sched)
+        disp = rctx.make_dispatcher()
+        try:
+            ra = ex.execute(original, sample, rctx, dispatcher=disp)
+            rb = ex.execute(rewritten, sample, rctx, dispatcher=disp)
+            exec_wall = disp.wall_s
+        finally:
+            disp.close()
 
-        if (ra.scalar is None) != (rb.scalar is None):
+        # compare by the *declared* result kind: an unanswerable reduce
+        # yields scalar=None yet is still a scalar-valued query
+        if ra.is_reduce != rb.is_reduce:
             rating, detail = 0.0, "result-kind mismatch"
-        elif ra.scalar is not None:
+        elif ra.is_reduce:
             rating = _scalar_similarity(ra.scalar, rb.scalar)
             detail = f"scalar {ra.scalar!r} vs {rb.scalar!r}"
         else:
@@ -139,9 +146,10 @@ class Judge:
                          latency_s=tier.latency(4.0))
         meter.record(self.judge_tier, usage)
         # execution + judging both contribute to verification wall-clock;
-        # the shared scheduler's makespan covers both sample runs
+        # the shared dispatcher's wall covers both sample runs (modeled
+        # makespan under the simulated driver, measured under threads)
         usage_total = bk.Usage(calls=usage.calls, tok_in=usage.tok_in,
                                tok_out=usage.tok_out, usd=usage.usd,
-                               latency_s=usage.latency_s + sched.makespan)
+                               latency_s=usage.latency_s + exec_wall)
         return JudgeResult(rating=float(max(0.0, min(1.0, rating))),
                            usage=usage_total, detail=detail)

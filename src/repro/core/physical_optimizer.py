@@ -12,11 +12,14 @@ selected backends (matching the paper's optimize-then-execute pipeline in
 Fig. 4), so downstream operators are scored on realistic inputs.
 
 Sync vs async (Table 9): every backend call lands in the meter's call log
-and is placed on the shared event-driven scheduler
-(``runtime.EventScheduler``). ``async`` runs each operator's scoring calls
-concurrently over per-tier worker pools with a barrier before the next
-operator (its sample input depends on this operator's output); ``sync``
-collapses all tiers onto one worker, i.e. the sequential sum.
+and runs through the context's dispatcher (``runtime.Dispatcher``). Under
+the simulated driver, ``async`` places each operator's scoring calls
+concurrently on per-tier event-scheduler pools with a barrier before the
+next operator (its sample input depends on this operator's output) and
+``sync`` collapses all tiers onto one worker, i.e. the sequential sum.
+Under ``driver="threads"`` the scoring calls of one operator run
+concurrently *for real* on the tier worker pools and ``opt_wall_s`` is
+measured wall time.
 """
 from __future__ import annotations
 
@@ -68,7 +71,8 @@ def select_tier(scores: Dict[str, float], delta_min: float,
 
 def optimize(plan: plan_ir.LogicalPlan, table: Table,
              backends: "Dict[str, bk.Backend] | rt.ExecutionContext",
-             cfg: PhysicalOptConfig = PhysicalOptConfig()
+             cfg: PhysicalOptConfig = PhysicalOptConfig(),
+             dispatcher: Optional[rt.Dispatcher] = None
              ) -> PhysicalOptResult:
     ctx = rt.as_context(backends)
     n_sample = min(max(int(table.n_rows * cfg.sample_ratio), cfg.sample_min),
@@ -76,10 +80,20 @@ def optimize(plan: plan_ir.LogicalPlan, table: Table,
     sample = ex.with_rowids(table.sample(n_sample, seed=cfg.seed))
 
     meter = bk.UsageMeter()        # optimization-phase accounting only
-    sched = rt.EventScheduler(
-        cfg.concurrency if cfg.concurrency is not None else ctx.concurrency,
-        per_tier=ctx.per_tier_concurrency,
-        mode=cfg.mode if cfg.mode is not None else ctx.mode)
+    owns_dispatcher = dispatcher is None
+    if dispatcher is None:
+        over = {k: v for k, v in (("concurrency", cfg.concurrency),
+                                  ("mode", cfg.mode)) if v is not None}
+        dispatcher = ctx.fork(**over).make_dispatcher() if over \
+            else ctx.make_dispatcher()
+    try:
+        return _optimize(plan, sample, ctx, cfg, meter, dispatcher)
+    finally:
+        if owns_dispatcher:
+            dispatcher.close()
+
+
+def _optimize(plan, sample, ctx, cfg, meter, disp) -> PhysicalOptResult:
     cursor = 0
     assignments: Dict[int, str] = {}
     all_scores: Dict[int, Dict[str, float]] = {}
@@ -95,35 +109,44 @@ def optimize(plan: plan_ir.LogicalPlan, table: Table,
             res = imp.improvement_scores(
                 ctx.backends, op, values, method=cfg.estimator, meter=meter,
                 max_cond_eval=(cfg.max_cond_eval
-                               if cfg.estimator == "approx" else None))
+                               if cfg.estimator == "approx" else None),
+                dispatcher=disp)
             tier = select_tier(res.scores, cfg.delta_min)
             assignments[k] = tier
             all_scores[k] = dict(res.scores)
             # scoring calls for one operator run as one concurrent stage
-            cursor, _ = sched.drain(meter, cursor)
-            sched.barrier()
+            # (simulated driver: drain + barrier; threads: already real)
+            cursor = disp.checkpoint(meter, cursor)
         # flow the sample forward using the chosen tier (or the UDF)
         cur = _apply_op(op, cur, values, ctx,
-                        assignments.get(k, "m1"), meter)
-        cursor, _ = sched.drain(meter, cursor)
-        sched.barrier()   # the next operator consumes this one's output
+                        assignments.get(k, "m1"), meter, disp)
+        cursor = disp.checkpoint(meter, cursor)
+        # ^ the next operator consumes this one's output
 
     tiered = plan.with_tiers(assignments)
     return PhysicalOptResult(plan=tiered, assignments=assignments,
                              scores=all_scores, meter=meter,
-                             opt_wall_s=sched.makespan)
+                             opt_wall_s=disp.wall_s)
 
 
 def _apply_op(op: plan_ir.Operator, table: Table, values,
               ctx: rt.ExecutionContext, tier: str,
-              meter: bk.UsageMeter) -> Table:
+              meter: bk.UsageMeter,
+              dispatcher: Optional[rt.Dispatcher] = None) -> Table:
     """Advance the optimizer's sample through one operator (shared
     ``runtime`` apply path — same UDF safety and bool-mask parsing as the
-    executor)."""
+    executor, and the *same accounting*: calls bill under the backend's own
+    tier name and honor the context's batch size and output cache, so
+    optimizer-phase usage is directly comparable to execution-phase usage)."""
     if op.udf is not None:
         table, _ = rt.run_udf_op(op, table, values)
         return table
-    outs = ctx.backends[tier].run_values(op, values, meter=meter)
+    backend = ctx.backends[tier]
+    fan = dispatcher.fanout(backend.tier.name) \
+        if dispatcher is not None else None
+    outs, _, _ = rt.run_llm_op(op, values, backend, backend.tier.name,
+                               meter, batch_size=ctx.batch_size,
+                               cache=ctx.cache, fanout=fan)
     table, _ = rt.apply_outputs(op, table, outs)
     return table
 

@@ -1,7 +1,7 @@
-"""Event-driven execution runtime: the single scheduling surface shared by
-the executor, the judge, and both optimizers.
+"""Execution runtime: the single scheduling/dispatch surface shared by the
+executor, the judge, and both optimizers.
 
-Three pieces:
+Four pieces:
 
 * :class:`EventScheduler` — a discrete-event makespan model. Every LLM call
   becomes a *job* ``(tier, duration, ready_time)``; each tier owns a pool of
@@ -14,29 +14,58 @@ Three pieces:
   collapses every tier onto one worker, reproducing the paper's Table-9
   sequential accounting.
 
+* :class:`Dispatcher` — how operator work actually *runs*. Two drivers:
+
+  - :class:`SimulatedDispatcher` (``driver="simulated"``): backend calls
+    execute inline, one after another; their metered per-call latencies are
+    replayed through an :class:`EventScheduler`, so ``wall_s`` is a
+    deterministic *model* of overlapped execution (Table-9 accounting, and
+    the mode every hand-checkable schedule test uses).
+  - :class:`ThreadPoolDispatcher` (``driver="threads"``): backend calls run
+    on per-tier **bounded worker pools** (pool caps are serving quotas —
+    ``per_tier_concurrency`` wins over the default ``concurrency``), morsel
+    chains advance on a separate chain pool, and morsels of independent
+    operators genuinely overlap. ``wall_s`` is **measured** wall time.
+
+  Results, call counts, and per-tier meter totals are identical across
+  drivers: the :class:`OutputCache` is single-flight (a value computed by
+  one in-flight morsel is awaited, not re-billed, by concurrent morsels)
+  and ``UsageMeter`` is lock-protected. One precise caveat: with
+  ``batch_size > 1`` AND a shared cache AND duplicate values split across
+  morsels, every unique value is still billed exactly once, but how the
+  misses *group into batched calls* depends on which morsel claims each
+  key first — so call counts can differ by a few chunk-boundary calls
+  between drivers in that corner (batch_size=1, or no cache, or no
+  cross-morsel duplicates, is exact).
+
 * :class:`ExecutionContext` — bundles everything an execution needs
-  (backends, default tier, batch size, concurrency, morsel size,
+  (backends, default tier, batch size, concurrency, morsel size, driver,
   :class:`OutputCache`, ``UsageMeter``) into one object threaded through
   ``executor.execute``, ``judge.Judge``, the logical optimizer's candidate
   evaluation, and the physical optimizer's sample flow. ``as_context``
   upgrades a bare ``{tier: Backend}`` dict, so every public entry point
-  accepts either.
+  accepts either. ``make_dispatcher()`` builds the context's driver.
 
 * shared operator application — ``run_llm_op`` (cache-aware backend
-  dispatch), ``bool_mask`` (the one place LLM filter outputs are parsed),
-  ``apply_outputs`` and ``run_udf_op`` (the one place operator outputs
-  mutate a table). Previously the executor and the physical optimizer each
-  carried a private copy of this logic.
+  dispatch, optionally fanned out over a tier pool), ``bool_mask`` (the one
+  place LLM filter outputs are parsed), ``apply_outputs`` and
+  ``run_udf_op`` (the one place operator outputs mutate a table).
 
 Per-call latencies flow from the backends through ``UsageMeter.call_log``;
-schedulers consume new log entries via :meth:`EventScheduler.drain`, so any
-backend that meters itself is automatically schedulable.
+the simulated driver consumes new log entries via
+:meth:`EventScheduler.drain`, so any backend that meters itself is
+automatically schedulable — and the same log can be *replayed* through an
+EventScheduler after a threaded run to report measured vs simulated wall
+side by side (``launch/serve.py --semantic`` does exactly that).
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Dict, List, Optional, Tuple
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import backends as bk
 from repro.core import plan as plan_ir
@@ -139,7 +168,7 @@ def _vkey(v) -> str:
 
 
 class OutputCache:
-    """LLM-output memo keyed by (tier, op semantics, value).
+    """LLM-output memo keyed by (tier, op semantics, value) — thread-safe.
 
     Semantic operators are deterministic per (model, prompt) here, so
     repeated sample executions — the judge runs the original plan once per
@@ -147,56 +176,183 @@ class OutputCache:
     cache instead of re-invoking the backend. This is the executor-level
     analogue of the paper's computation-reuse theme (cf. QuestCache [18]);
     only cache *misses* are billed. Keys are per-value, so morsel-pipelined
-    and barrier execution populate and hit the cache identically."""
+    and barrier execution populate and hit the cache identically.
+
+    Under the threaded driver, concurrent morsels may race on a key. The
+    cache is **single-flight**: ``claim`` hands the key to exactly one
+    caller (the others get an event to wait on), so a value in flight is
+    billed once — the same totals a sequential run produces. Duplicate keys
+    *within* one claim are deliberately re-owned, matching the sequential
+    path's double-billing of within-request duplicates."""
 
     def __init__(self):
         self.data: Dict[tuple, Any] = {}
         self.hits = 0
         self.misses = 0
+        self._lock = threading.Lock()
+        # key -> (owner token, event set when the owner publishes/releases)
+        self._pending: Dict[tuple, Tuple[object, threading.Event]] = {}
 
     def key(self, op: plan_ir.Operator, tier: str, batch: int, v) -> tuple:
         return (op.kind, op.instruction, op.input_column, tier, batch,
                 _vkey(v))
 
+    def claim(self, keys: Sequence[tuple],
+              token: object) -> List[Tuple[str, Any]]:
+        """Partition ``keys`` in order into ``("hit", value)``,
+        ``("own", None)`` (this caller must compute and publish), or
+        ``("wait", event)`` (another caller is computing it)."""
+        out: List[Tuple[str, Any]] = []
+        with self._lock:
+            for k in keys:
+                if k in self.data:
+                    self.hits += 1
+                    out.append(("hit", self.data[k]))
+                    continue
+                pend = self._pending.get(k)
+                if pend is not None and pend[0] is not token:
+                    self.hits += 1      # a sequential run would hit here
+                    out.append(("wait", pend[1]))
+                    continue
+                if pend is None:
+                    self._pending[k] = (token, threading.Event())
+                self.misses += 1
+                out.append(("own", None))
+        return out
+
+    def publish(self, k: tuple, value) -> None:
+        with self._lock:
+            self.data[k] = value
+            pend = self._pending.pop(k, None)
+        if pend is not None:
+            pend[1].set()
+
+    def release(self, keys: Sequence[tuple], token: object) -> None:
+        """Abandon in-flight reservations (owner failed); waiters recompute."""
+        events = []
+        with self._lock:
+            for k in keys:
+                pend = self._pending.get(k)
+                if pend is not None and pend[0] is token:
+                    events.append(self._pending.pop(k)[1])
+        for e in events:
+            e.set()
+
+    def wait_value(self, k: tuple,
+                   event: threading.Event) -> Tuple[bool, Any]:
+        event.wait()
+        with self._lock:
+            if k in self.data:
+                return True, self.data[k]
+        return False, None
+
+
+def run_backend_calls(op: plan_ir.Operator, values: Sequence[Any], backend,
+                      meter: bk.UsageMeter, batch_size: int = 1,
+                      fanout: Optional[Callable] = None) -> List[Any]:
+    """Invoke the backend over ``values``. Without a ``fanout`` the whole
+    request is one inline ``run_values`` (the backend batches internally).
+    With a ``fanout`` — a callable mapping a list of thunks to their results,
+    supplied by :class:`ThreadPoolDispatcher` — each batch-sized chunk
+    becomes its own ``run_values`` call on the tier's worker pool, so the
+    per-call latencies genuinely overlap. Chunk boundaries equal the
+    backend's internal batching, so call counts and meter totals match the
+    inline path exactly."""
+    values = list(values)
+    if fanout is None:
+        return backend.run_values(op, values, meter=meter,
+                                  batch_size=batch_size)
+    if op.kind == plan_ir.REDUCE:
+        chunks = [values]
+    else:
+        step = max(1, int(batch_size))
+        chunks = [values[i:i + step] for i in range(0, len(values), step)]
+    thunks = [
+        (lambda c=c: backend.run_values(op, c, meter=meter,
+                                        batch_size=batch_size))
+        for c in chunks]
+    return [o for part in fanout(thunks) for o in part]
+
 
 def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
                meter: bk.UsageMeter, *, batch_size: int = 1,
-               cache: Optional[OutputCache] = None):
+               cache: Optional[OutputCache] = None,
+               fanout: Optional[Callable] = None):
     """Execute one LLM operator, via the cache when provided. Returns
-    (outputs, n_calls_made, latency_of_calls_made)."""
+    (outputs, n_calls_made, latency_of_calls_made).
+
+    ``fanout`` (see :func:`run_backend_calls`) runs the backend calls on a
+    tier worker pool; the returned call/latency deltas are then approximate
+    (other threads may bill the same tier concurrently) — callers on the
+    threaded path ignore them and read the meter instead."""
+    values = list(values)
     before_calls = meter.calls(tier_name)
-    before_lat = meter.by_tier.get(tier_name, bk.Usage()).latency_s
-    if cache is None or op.kind == plan_ir.REDUCE:
-        if cache is not None and op.kind == plan_ir.REDUCE:
-            rkey = cache.key(op, tier_name, batch_size,
-                             "\x1e".join(_vkey(v) for v in values))
-            if rkey in cache.data:
-                cache.hits += 1
-                return [cache.data[rkey]], 0, 0.0
-            outs = backend.run_values(op, values, meter=meter,
-                                      batch_size=batch_size)
-            cache.misses += 1
-            cache.data[rkey] = outs[0]
-        else:
-            outs = backend.run_values(op, values, meter=meter,
-                                      batch_size=batch_size)
-        n_calls = meter.calls(tier_name) - before_calls
-        lat = meter.by_tier[tier_name].latency_s - before_lat
-        return outs, n_calls, lat
+    before_lat = meter.latency(tier_name)
+
+    def deltas(ran_calls: bool):
+        if fanout is not None:
+            return 0, 0.0
+        if not ran_calls:
+            return 0, 0.0
+        return (meter.calls(tier_name) - before_calls,
+                meter.latency(tier_name) - before_lat)
+
+    if cache is None:
+        outs = run_backend_calls(op, values, backend, meter, batch_size,
+                                 fanout)
+        n, lat = deltas(True)
+        return outs, n, lat
+
+    token = object()
+    if op.kind == plan_ir.REDUCE:
+        rkey = cache.key(op, tier_name, batch_size,
+                         "\x1e".join(_vkey(v) for v in values))
+        state, got = cache.claim([rkey], token)[0]
+        if state == "hit":
+            return [got], 0, 0.0
+        if state == "wait":
+            ok, val = cache.wait_value(rkey, got)
+            if ok:
+                return [val], 0, 0.0
+            state, got = cache.claim([rkey], token)[0]  # owner failed
+            if state == "hit":
+                return [got], 0, 0.0
+        try:
+            outs = run_backend_calls(op, values, backend, meter, batch_size,
+                                     fanout)
+        except BaseException:
+            cache.release([rkey], token)
+            raise
+        cache.publish(rkey, outs[0])
+        n, lat = deltas(True)
+        return [outs[0]], n, lat
 
     keys = [cache.key(op, tier_name, batch_size, v) for v in values]
-    missing = [i for i, k in enumerate(keys) if k not in cache.data]
-    cache.hits += len(values) - len(missing)
-    cache.misses += len(missing)
-    if missing:
-        outs_new = backend.run_values(op, [values[i] for i in missing],
-                                      meter=meter, batch_size=batch_size)
-        for i, o in zip(missing, outs_new):
-            cache.data[keys[i]] = o
-    n_calls = meter.calls(tier_name) - before_calls
-    lat = (meter.by_tier[tier_name].latency_s - before_lat) if missing \
-        else 0.0
-    return [cache.data[k] for k in keys], n_calls, lat
+    states = cache.claim(keys, token)
+    own = [i for i, (s, _) in enumerate(states) if s == "own"]
+    outs: List[Any] = [None] * len(values)
+    try:
+        if own:
+            got = run_backend_calls(op, [values[i] for i in own], backend,
+                                    meter, batch_size, fanout)
+            for i, o in zip(own, got):
+                outs[i] = o
+                cache.publish(keys[i], o)
+    except BaseException:
+        cache.release([keys[i] for i in own], token)
+        raise
+    for i, (s, v) in enumerate(states):
+        if s == "hit":
+            outs[i] = v
+        elif s == "wait":
+            ok, val = cache.wait_value(keys[i], v)
+            if not ok:   # the owning caller failed: compute solo
+                val = run_backend_calls(op, [values[i]], backend, meter,
+                                        batch_size, fanout)[0]
+                cache.publish(keys[i], val)
+            outs[i] = val
+    n, lat = deltas(bool(own))
+    return outs, n, lat
 
 
 # ---------------------------------------------------------------------------
@@ -208,6 +364,23 @@ def bool_mask(outs) -> List[bool]:
     return [o if isinstance(o, bool) else
             str(o).strip().lower().startswith(("true", "yes"))
             for o in outs]
+
+
+def rank_scores(outs) -> List[float]:
+    """Parse RANK outputs into similarity scores. Real LLMs return digits
+    as *strings*, so numeric text parses as a score. ``bool`` is an ``int``
+    subclass — True/False are filter-shaped answers, not scores — and any
+    unparseable output falls back to the row's input position."""
+    sims: List[float] = []
+    for i, o in enumerate(outs):
+        if isinstance(o, (int, float)) and not isinstance(o, bool):
+            sims.append(float(o))
+            continue
+        try:
+            sims.append(float(str(o).strip()))
+        except (TypeError, ValueError):
+            sims.append(float(i))
+    return sims
 
 
 def _rank_column(sims) -> List[int]:
@@ -222,17 +395,15 @@ def apply_outputs(op: plan_ir.Operator, table: Table,
                   outs) -> Tuple[Table, Any]:
     """Fold one LLM operator's outputs into the table.
 
-    Returns ``(table, scalar)``; scalar is non-None only for reduce."""
+    Returns ``(table, scalar)``; scalar is meaningful only for reduce."""
     if op.kind == plan_ir.FILTER:
         return table.select(bool_mask(outs)), None
     if op.kind == plan_ir.MAP:
         return table.with_column(op.output_column, outs), None
     if op.kind == plan_ir.REDUCE:
         return table, outs[0]
-    sims = [(o if isinstance(o, (int, float)) else i)
-            for i, o in enumerate(outs)]
     return table.with_column(op.output_column or "rank",
-                             _rank_column(sims), "numeric"), None
+                             _rank_column(rank_scores(outs)), "numeric"), None
 
 
 def run_udf_op(op: plan_ir.Operator, table: Table,
@@ -265,6 +436,209 @@ def run_udf_op(op: plan_ir.Operator, table: Table,
 
 
 # ---------------------------------------------------------------------------
+# Dispatchers: simulated (event-model) vs threads (measured)
+# ---------------------------------------------------------------------------
+
+class _DoneTask:
+    """An already-completed morsel task."""
+    __slots__ = ("_value", "finish")
+
+    def __init__(self, value, finish: float = 0.0):
+        self._value = value
+        self.finish = finish
+
+    def result(self):
+        return self._value, self.finish
+
+
+class _FutureTask:
+    """A morsel task running on the chain pool."""
+    __slots__ = ("_fut",)
+
+    def __init__(self, fut: Future):
+        self._fut = fut
+
+    def result(self):
+        return self._fut.result()
+
+
+class Dispatcher:
+    """How operator work runs: the executor hands every morsel step and
+    every backend call to a dispatcher, which either simulates overlap
+    (:class:`SimulatedDispatcher`) or provides it for real
+    (:class:`ThreadPoolDispatcher`). Both expose the same task interface:
+
+      done(value, finish)         wrap an immediate morsel
+      defer(task, fn)             fn(value, ready_s) -> (value, finish_s)
+                                  after ``task`` completes
+      run_llm(...) / run_host(..) one operator's backend / host work
+      checkpoint(meter, cursor)   optimizer stage boundary (drain+barrier
+                                  under simulation, no-op under threads)
+      wall_s                      modeled makespan / measured elapsed
+    """
+
+    kind = "abstract"
+
+    def done(self, value, finish: float = 0.0) -> _DoneTask:
+        return _DoneTask(value, finish)
+
+    def fanout(self, tier_name: str) -> Optional[Callable]:
+        """Per-tier call fanout for :func:`run_backend_calls`; None means
+        run inline (sequential)."""
+        return None
+
+    def close(self) -> None:
+        pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class SimulatedDispatcher(Dispatcher):
+    """Inline execution + EventScheduler replay (deterministic wall model)."""
+
+    kind = "simulated"
+
+    def __init__(self, scheduler: EventScheduler):
+        self.sched = scheduler
+
+    def defer(self, task, fn):
+        value, ready = task.result()
+        return _DoneTask(*fn(value, ready))
+
+    def run_llm(self, op, values, backend, tier_name, meter, *,
+                batch_size: int = 1, cache: Optional[OutputCache] = None,
+                ready_s: float = 0.0):
+        cursor = len(meter.call_log)
+        outs, _, _ = run_llm_op(op, values, backend, tier_name, meter,
+                                batch_size=batch_size, cache=cache)
+        _, finish = self.sched.drain(meter, cursor, ready_s=ready_s)
+        return outs, finish
+
+    def run_host(self, fn, n_rows: int, ready_s: float = 0.0):
+        finish = self.sched.submit(HOST_TIER,
+                                   n_rows * UDF_SECONDS_PER_ROW,
+                                   ready_s=ready_s)
+        return fn(), finish
+
+    def checkpoint(self, meter: bk.UsageMeter, cursor: int) -> int:
+        cursor, _ = self.sched.drain(meter, cursor)
+        self.sched.barrier()
+        return cursor
+
+    @property
+    def wall_s(self) -> float:
+        return self.sched.makespan
+
+
+class ThreadPoolDispatcher(Dispatcher):
+    """Real concurrency: per-tier bounded worker pools for backend calls
+    (pool caps = serving quotas) plus a chain pool that advances morsel
+    pipelines. ``wall_s`` is measured (construction -> last completion).
+
+    Liveness: the executor submits morsel tasks in operator order, so every
+    chain task's dependency sits *earlier* in the chain pool's FIFO queue —
+    a blocked worker always waits on a task some other worker has already
+    dequeued, and tier pools (which never block on chain tasks) guarantee
+    progress. ``mode="sync"`` collapses every tier onto one shared
+    single-worker pool, the threaded analogue of sequential accounting."""
+
+    kind = "threads"
+
+    def __init__(self, concurrency: int = 16,
+                 per_tier: Optional[Dict[str, int]] = None,
+                 mode: str = "async", chain_workers: int = 32):
+        if mode not in ("sync", "async"):
+            raise ValueError(f"unknown dispatcher mode {mode!r}")
+        self.mode = mode
+        self.concurrency = max(1, int(concurrency))
+        self.per_tier = dict(per_tier or {})
+        self._pools: Dict[str, ThreadPoolExecutor] = {}
+        self._lock = threading.Lock()
+        self._chain = ThreadPoolExecutor(max_workers=max(1, chain_workers),
+                                         thread_name_prefix="morsel")
+        self._host_lock = threading.Lock()
+        self._t0 = time.perf_counter()
+        self._last = self._t0
+
+    def workers(self, tier: str) -> int:
+        if self.mode == "sync":
+            return 1
+        return max(1, int(self.per_tier.get(tier, self.concurrency)))
+
+    def _pool(self, tier: str) -> ThreadPoolExecutor:
+        key = tier if self.mode != "sync" else "\x00sync"
+        with self._lock:
+            pool = self._pools.get(key)
+            if pool is None:
+                pool = ThreadPoolExecutor(max_workers=self.workers(tier))
+                self._pools[key] = pool
+            return pool
+
+    def _touch(self) -> None:
+        now = time.perf_counter()
+        with self._lock:
+            if now > self._last:
+                self._last = now
+
+    def fanout(self, tier_name: str) -> Callable:
+        pool = self._pool(tier_name)
+
+        def fan(thunks):
+            futs = [pool.submit(t) for t in thunks]
+            res = [f.result() for f in futs]
+            self._touch()
+            return res
+
+        return fan
+
+    def defer(self, task, fn):
+        def chain():
+            value, ready = task.result()
+            return fn(value, ready)
+
+        return _FutureTask(self._chain.submit(chain))
+
+    def run_llm(self, op, values, backend, tier_name, meter, *,
+                batch_size: int = 1, cache: Optional[OutputCache] = None,
+                ready_s: float = 0.0):
+        outs, _, _ = run_llm_op(op, values, backend, tier_name, meter,
+                                batch_size=batch_size, cache=cache,
+                                fanout=self.fanout(tier_name))
+        return outs, 0.0
+
+    def run_host(self, fn, n_rows: int, ready_s: float = 0.0):
+        # one Python process: host UDF work serializes against itself but
+        # overlaps in-flight backend I/O
+        with self._host_lock:
+            out = fn()
+        self._touch()
+        return out, 0.0
+
+    def checkpoint(self, meter: bk.UsageMeter, cursor: int) -> int:
+        return len(meter.call_log)
+
+    @property
+    def wall_s(self) -> float:
+        with self._lock:
+            return max(0.0, self._last - self._t0)
+
+    def close(self) -> None:
+        self._chain.shutdown(wait=True)
+        with self._lock:
+            pools = list(self._pools.values())
+            self._pools.clear()
+        for p in pools:
+            p.shutdown(wait=True)
+
+
+DRIVERS = ("simulated", "threads")
+
+
+# ---------------------------------------------------------------------------
 # Execution context
 # ---------------------------------------------------------------------------
 
@@ -276,7 +650,9 @@ class ExecutionContext:
     ``per_tier_concurrency`` overrides it for individual tiers (a weak tier
     served on many replicas can take more simultaneous calls than the
     flagship). ``morsel_size=0`` disables pipelining (whole-table barrier
-    between operators — the seed executor's behaviour)."""
+    between operators — the seed executor's behaviour). ``driver`` selects
+    how backend calls run: ``"simulated"`` (inline + event-scheduler wall
+    model) or ``"threads"`` (per-tier worker pools, measured wall)."""
     backends: Dict[str, bk.Backend]
     default_tier: str = "m*"
     concurrency: int = 16
@@ -284,6 +660,7 @@ class ExecutionContext:
     batch_size: int = 1
     morsel_size: int = DEFAULT_MORSEL_ROWS
     mode: str = "async"
+    driver: str = "simulated"
     cache: Optional[OutputCache] = None
     meter: bk.UsageMeter = dataclasses.field(default_factory=bk.UsageMeter)
 
@@ -294,6 +671,16 @@ class ExecutionContext:
         return EventScheduler(self.concurrency,
                               per_tier=self.per_tier_concurrency,
                               mode=self.mode)
+
+    def make_dispatcher(self) -> Dispatcher:
+        if self.driver == "threads":
+            return ThreadPoolDispatcher(self.concurrency,
+                                        per_tier=self.per_tier_concurrency,
+                                        mode=self.mode)
+        if self.driver != "simulated":
+            raise ValueError(f"unknown driver {self.driver!r} "
+                             f"(expected one of {DRIVERS})")
+        return SimulatedDispatcher(self.make_scheduler())
 
     def fork(self, **overrides) -> "ExecutionContext":
         """A sibling context; e.g. ``fork(meter=UsageMeter())`` gives an

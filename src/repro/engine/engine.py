@@ -194,20 +194,37 @@ class ContinuousBatcher:
         self.queue.append(req)
         return rid
 
+    def _fill_slots(self) -> None:
+        for slot in self.engine.free_slots():
+            if not self.queue:
+                break
+            done = self.engine.insert(self.queue.pop(0), slot)
+            if done is not None:
+                self.finished[done.rid] = done
+
+    def step(self, key=None) -> bool:
+        """One scheduling round: fill free slots from the queue, then one
+        decode tick. Returns True while work remains. This is the unit a
+        cooperating driver thread executes under a lock — callers that
+        share the batcher (e.g. ``JAXBackend`` under the threaded
+        execution driver) alternate steps so their requests batch together
+        on the engine's slots. ``key`` seeds THIS tick's sampling only;
+        a caller looping step() with temperature>0 requests must split a
+        fresh subkey per call (as ``run`` does) or every tick reuses the
+        same noise."""
+        self._fill_slots()
+        if self.engine.active.any():
+            for req in self.engine.decode_tick(key):
+                self.finished[req.rid] = req
+        return bool(self.queue or self.engine.active.any())
+
     def run(self, key=None) -> Dict[int, Request]:
-        """Drive to completion: fill free slots, tick, repeat."""
+        """Drive to completion: fill free slots, tick, repeat — one
+        ``step`` per round, splitting a fresh sampling subkey per tick."""
         while self.queue or self.engine.active.any():
-            for slot in self.engine.free_slots():
-                if not self.queue:
-                    break
-                done = self.engine.insert(self.queue.pop(0), slot)
-                if done is not None:
-                    self.finished[done.rid] = done
-            if self.engine.active.any():
-                if key is not None:
-                    key, sub = jax.random.split(key)
-                else:
-                    sub = None
-                for req in self.engine.decode_tick(sub):
-                    self.finished[req.rid] = req
+            self._fill_slots()
+            sub = None
+            if key is not None and self.engine.active.any():
+                key, sub = jax.random.split(key)
+            self.step(sub)
         return self.finished

@@ -10,12 +10,20 @@ Untrained reduced models emit noise — examples use this backend to
 demonstrate the real serving path, optionally composing it with the oracle
 ("echo" mode) so the analytics answer stays meaningful while latency/cost
 numbers are real.
+
+Thread-safety: ``run_values`` may be called from many worker threads at
+once (the ``runtime.ThreadPoolDispatcher`` driver). All callers submit into
+ONE shared :class:`ContinuousBatcher` and then cooperate on driving it —
+each takes the backend lock for a single ``step()`` at a time — so
+concurrent operators' requests genuinely share the engine's decode slots
+(continuous batching across callers) instead of corrupting the KV cache.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Any, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 from repro.core import backends as bk
 from repro.core import cost as cost_mod
@@ -37,6 +45,41 @@ class JAXBackend:
     engine: GenerationEngine
     oracle: Optional[Any] = None      # echo mode: answers from the oracle,
     max_new_tokens: int = 16          # latency/cost from the real engine
+    # shared continuous batcher + the lock serializing engine access; every
+    # run_values (possibly from many dispatcher threads) submits here
+    _lock: threading.RLock = dataclasses.field(
+        default_factory=threading.RLock, init=False, repr=False,
+        compare=False)
+    _batcher: Optional[ContinuousBatcher] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+
+    def _submit(self, prompts: Sequence[str]) -> List[int]:
+        with self._lock:
+            if self._batcher is None:
+                self._batcher = ContinuousBatcher(self.engine)
+            return [self._batcher.submit(p,
+                                         max_new_tokens=self.max_new_tokens)
+                    for p in prompts]
+
+    def _collect(self, rids: Sequence[int]) -> Dict[int, Any]:
+        """Drive the shared batcher until this caller's requests finish.
+
+        Concurrent callers cooperate: whoever holds the lock advances the
+        engine by one ``step`` (slot refill + one decode tick), then
+        releases it so other threads can submit mid-flight — their
+        requests join the same slot batch."""
+        pending = set(rids)
+        out: Dict[int, Any] = {}
+        while pending:
+            with self._lock:
+                for r in list(pending):
+                    req = self._batcher.finished.pop(r, None)
+                    if req is not None:
+                        out[r] = req
+                        pending.discard(r)
+                if pending:
+                    self._batcher.step()
+        return out
 
     def run_values(self, op: plan_ir.Operator, values: Sequence[Any],
                    meter: Optional[bk.UsageMeter] = None,
@@ -48,10 +91,8 @@ class JAXBackend:
         else:
             prompts = [render_prompt(op, v) for v in values]
 
-        batcher = ContinuousBatcher(self.engine)
-        rids = [batcher.submit(p, max_new_tokens=self.max_new_tokens)
-                for p in prompts]
-        finished = batcher.run()
+        rids = self._submit(prompts)
+        finished = self._collect(rids)
         raw = [finished[r].text for r in rids]
 
         wall = time.perf_counter() - t0  # noqa: F841 — true batch wall

@@ -8,11 +8,14 @@ Full-size configs are proven via launch/dryrun.py (decode cells lower the
 same decode_step this engine drives).
 
 ``--semantic <dataset>`` serves a semantic-analytics workload instead: the
-named dataset's first query runs through the event-driven execution runtime
+named dataset's first query runs through the execution runtime
 (``core.runtime.ExecutionContext`` + morsel-pipelined executor) with the
-default tier backed by THIS engine (oracle-echo mode), so the report shows
-real measured per-request latencies replayed through the same scheduler the
-simulators use:
+default tier backed by THIS engine (oracle-echo mode). With the default
+``--driver threads`` the morsels genuinely overlap on the engine's slots
+and the reported wall is *measured*; the metered per-call latencies are
+additionally replayed through an ``EventScheduler`` so the report shows
+measured vs simulated wall side by side (``--driver simulated`` runs the
+deterministic event-model path instead):
 
     PYTHONPATH=src python -m repro.launch.serve --semantic movie --slots 4
 """
@@ -59,16 +62,25 @@ def serve_semantic(args):
                                 max_new_tokens=args.max_new)
     ctx = rt.ExecutionContext(backends=backends, default_tier="m1",
                               concurrency=args.slots,
-                              morsel_size=args.slots * 4)
+                              morsel_size=args.slots * 4,
+                              driver=args.driver)
     q = WORKLOADS[args.semantic][0]
     print(f"[serve] semantic query {q.qid} over {table.name} "
-          f"({table.n_rows} rows), m1 = {cfg.name} on {args.slots} slots")
+          f"({table.n_rows} rows), m1 = {cfg.name} on {args.slots} slots, "
+          f"driver={args.driver}")
     t0 = time.time()
     res = ex.execute(q.plan_for(table), table, ctx)
     dt = time.time() - t0
     print(f"[serve] answer: {repr(res.value())[:120]}")
-    print(f"[serve] scheduled wall={res.wall_s:.2f}s (event-driven, "
-          f"{len(ctx.meter.call_log)} calls)  host={dt:.2f}s")
+    # measured vs simulated, side by side: replay the metered per-call
+    # latencies through the event scheduler regardless of the driver
+    replay = rt.EventScheduler(concurrency=args.slots)
+    replay.drain(ctx.meter, 0)
+    measured = res.wall_s if args.driver == "threads" else dt
+    print(f"[serve] wall measured={measured:.2f}s "
+          f"(driver={args.driver}, {len(ctx.meter.call_log)} calls)  "
+          f"simulated={replay.makespan:.2f}s (event replay)  "
+          f"host={dt:.2f}s")
     for tname, u in ctx.meter.by_tier.items():
         print(f"  [{tname}] calls={u.calls} tok_in={u.tok_in:.0f} "
               f"usd=${u.usd:.4f} latency_sum={u.latency_s:.2f}s")
@@ -77,10 +89,13 @@ def serve_semantic(args):
     return res
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    # BooleanOptionalAction so --no-reduced actually reaches the full-size
+    # config (store_true with default=True made it unreachable)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=160)
@@ -88,8 +103,16 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--semantic", default="",
                     help="dataset name: serve a semantic workload through "
-                         "the event-driven runtime instead of raw prompts")
-    args = ap.parse_args(argv)
+                         "the execution runtime instead of raw prompts")
+    ap.add_argument("--driver", choices=("simulated", "threads"),
+                    default="threads",
+                    help="--semantic execution driver: real thread pools "
+                         "(measured wall) or the event-model simulation")
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     if args.semantic:
         return serve_semantic(args)

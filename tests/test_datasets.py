@@ -53,7 +53,16 @@ def test_oracle_covers_every_workload_instruction(name):
         plan = q.plan_for(table)
         plan.validate()
         res = ex.execute(plan, table, backends, default_tier="m*")
-        assert res.value() is not None, (name, q.qid)
+        if res.is_reduce and res.scalar is None:
+            # a reduce is legitimately None only when the filter chain
+            # emptied the table on this small slice (max/avg of nothing);
+            # otherwise None means an oracle coverage gap
+            pre = P.LogicalPlan(tuple(op for op in plan.ops
+                                      if op.kind != P.REDUCE))
+            sub = ex.execute(pre, table, backends, default_tier="m*")
+            assert sub.table.n_rows == 0, (name, q.qid)
+        else:
+            assert res.value() is not None, (name, q.qid)
 
 
 @pytest.mark.parametrize("name", DATASETS)

@@ -1,0 +1,344 @@
+"""Concurrency-driver suite: simulated vs threaded dispatchers must agree
+on results / call counts / per-tier meter totals, the threaded driver's
+wall must be *measured* (a real speedup over the sequential latency sum),
+the output cache must be single-flight under concurrent morsels — plus
+regression tests for the executor/optimizer correctness fixes that rode
+along (RANK score parsing, reduce result-kind flag, optimizer sample-flow
+accounting, serve.py --reduced flag)."""
+import threading
+import time
+
+import pytest
+
+from repro.core import backends as bk
+from repro.core import cost as cost_mod
+from repro.core import executor as ex
+from repro.core import judge as judge_mod
+from repro.core import logical_optimizer as lopt
+from repro.core import physical_optimizer as popt
+from repro.core import plan as P
+from repro.core import runtime as rt
+from repro.core.table import Table
+from repro.data import load_dataset
+
+from conftest import perfect_backends
+
+
+@pytest.fixture(scope="module")
+def movie_small():
+    return load_dataset("movie", max_rows=48)
+
+
+class SleepBackend:
+    """Always-correct backend whose calls *really* sleep — bills one
+    ``delay_s`` latency per (batched) call, exactly like SimulatedBackend
+    bills its modeled latency, and counts calls under a lock."""
+
+    def __init__(self, oracle, delay_s=0.05, name="m*", capability=1.01):
+        self.tier = cost_mod.TierSpec(name, capability, 0.0, 0.0,
+                                      delay_s, 0.0)
+        self.oracle = oracle
+        self.delay_s = delay_s
+        self.calls_made = 0
+        self._lock = threading.Lock()
+
+    def run_values(self, op, values, meter=None, batch_size=1):
+        values = list(values)
+        if op.kind == P.REDUCE:
+            n_calls = 1
+            outs = [self.oracle.answer_reduce(op, values)]
+        else:
+            n_calls = max(1, -(-len(values) // batch_size))
+            outs = [self.oracle.answer(op, v) for v in values]
+        with self._lock:
+            self.calls_made += n_calls
+        time.sleep(self.delay_s * n_calls)
+        if meter is not None:
+            meter.record(self.tier.name,
+                         bk.Usage(calls=n_calls, tok_in=8.0 * len(values),
+                                  tok_out=4.0 * n_calls, usd=0.0,
+                                  latency_s=self.delay_s * n_calls),
+                         per_call_latency_s=[self.delay_s] * n_calls)
+        return outs
+
+
+class ConstOracle:
+    def answer(self, op, value):
+        return True
+
+    def answer_reduce(self, op, values):
+        return len(list(values))
+
+
+def _chain_plan():
+    return P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 1.", "IMDB_rating"),
+        P.Operator(P.MAP, "According to the movie plot, extract the "
+                   "genre(s) of each movie.", "Plot", "Genre"),
+        P.Operator(P.REDUCE, "Count the number of movies.", "Title"),
+    ))
+
+
+def _assert_meters_equal(ma, mb):
+    assert set(ma.by_tier) == set(mb.by_tier)
+    for tier in ma.by_tier:
+        ua, ub = ma.by_tier[tier], mb.by_tier[tier]
+        assert ua.calls == ub.calls, tier
+        assert ua.tok_in == pytest.approx(ub.tok_in)
+        assert ua.tok_out == pytest.approx(ub.tok_out)
+        assert ua.usd == pytest.approx(ub.usd)
+        assert ua.latency_s == pytest.approx(ub.latency_s)
+
+
+# ---------------------------------------------------------------------------
+# Driver equivalence: identical answers and accounting
+# ---------------------------------------------------------------------------
+
+def test_driver_equivalence_scalar_and_meter(movie_small):
+    table, oracle = movie_small
+    plan = _chain_plan()
+    runs = {}
+    for driver in rt.DRIVERS:
+        backends = bk.make_backends(oracle)
+        runs[driver] = ex.execute(plan, table, backends, default_tier="m*",
+                                  morsel_size=8, driver=driver)
+    a, b = runs["simulated"], runs["threads"]
+    assert a.scalar == b.scalar
+    assert a.is_reduce and b.is_reduce
+    assert a.rows_processed == b.rows_processed
+    _assert_meters_equal(a.meter, b.meter)
+
+
+def test_driver_equivalence_table_outputs(movie_small):
+    table, oracle = movie_small
+    plan = P.LogicalPlan(_chain_plan().ops[:2])     # filter -> map
+    runs = {d: ex.execute(plan, table, bk.make_backends(oracle),
+                          default_tier="m*", morsel_size=8, driver=d)
+            for d in rt.DRIVERS}
+    a, b = runs["simulated"], runs["threads"]
+    assert a.table.columns[ex.ROWID] == b.table.columns[ex.ROWID]
+    assert a.table.columns["Genre"] == b.table.columns["Genre"]
+
+
+def test_driver_equivalence_batched_calls(movie_small):
+    """Threaded chunk boundaries equal the backend's internal batching, so
+    batch-prompting call counts and outputs survive the driver swap."""
+    table, oracle = movie_small
+    op = P.Operator(P.FILTER, "The movie is directed by Christopher "
+                    "Nolan.", "Director")
+    plan = P.LogicalPlan((op,))
+    for batch in (3, 4):
+        runs, meters = {}, {}
+        for d in rt.DRIVERS:
+            meters[d] = bk.UsageMeter()
+            runs[d] = ex.execute(plan, table, bk.make_backends(oracle),
+                                 batch_size=batch, meter=meters[d],
+                                 morsel_size=8, driver=d)
+        assert meters["threads"].total.calls \
+            == meters["simulated"].total.calls == -(-table.n_rows // batch)
+        assert runs["threads"].table.columns[ex.ROWID] \
+            == runs["simulated"].table.columns[ex.ROWID]
+
+
+def test_driver_threaded_wall_is_measured_speedup(movie_small):
+    """The ISSUE-2 acceptance bar: 50ms/call fake backend, concurrency 8 —
+    measured threaded wall < 0.3x the sequential latency sum, with results,
+    call counts, and meter totals identical to the simulated driver."""
+    table, oracle = movie_small                     # 48 rows
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 1.",
+                   "IMDB_rating"),))
+    runs, meters, backends = {}, {}, {}
+    for d in rt.DRIVERS:
+        backends[d] = {"m*": SleepBackend(oracle, delay_s=0.05)}
+        meters[d] = bk.UsageMeter()
+        runs[d] = ex.execute(plan, table, backends[d], default_tier="m*",
+                             concurrency=8, morsel_size=8,
+                             meter=meters[d], driver=d)
+    seq_sum = meters["threads"].total.latency_s
+    assert seq_sum == pytest.approx(48 * 0.05)
+    assert runs["threads"].wall_s < 0.3 * seq_sum   # genuinely overlapped
+    # the simulated wall is the event-model prediction of the same overlap
+    assert runs["simulated"].wall_s == pytest.approx(
+        (48 / 8) * 0.05)
+    assert backends["threads"]["m*"].calls_made \
+        == backends["simulated"]["m*"].calls_made == 48
+    assert runs["threads"].table.columns[ex.ROWID] \
+        == runs["simulated"].table.columns[ex.ROWID]
+    _assert_meters_equal(meters["threads"], meters["simulated"])
+
+
+def test_driver_per_tier_cap_bounds_threaded_concurrency(movie_small):
+    """per_tier_concurrency caps are serving quotas on the real pools: a
+    1-worker tier serializes its calls even under the threaded driver."""
+    table, oracle = movie_small
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 1.",
+                   "IMDB_rating"),))
+    small = table.take(range(8))
+
+    def run(per_tier):
+        ctx = rt.ExecutionContext(
+            backends={"m*": SleepBackend(oracle, delay_s=0.05)},
+            default_tier="m*", concurrency=8, morsel_size=2,
+            per_tier_concurrency=per_tier, driver="threads")
+        return ex.execute(plan, small, ctx)
+
+    wide = run(None)
+    narrow = run({"m*": 1})
+    assert wide.wall_s < 0.3                     # 8 calls on 8 workers
+    assert narrow.wall_s > 8 * 0.05 * 0.8        # 8 calls on 1 worker
+
+
+def test_driver_cache_single_flight_under_concurrent_morsels():
+    """Concurrent morsels racing on identical values must not double-bill:
+    the single-flight cache gives both drivers the same hit/miss/call
+    totals a sequential run produces."""
+    oracle = ConstOracle()
+    table = Table({"v": [str(i % 8) for i in range(32)]}, name="dups")
+    plan = P.LogicalPlan((P.Operator(P.FILTER, "keep everything", "v"),))
+    stats = {}
+    for d in rt.DRIVERS:
+        backend = SleepBackend(oracle, delay_s=0.02)
+        cache = rt.OutputCache()
+        meter = bk.UsageMeter()
+        res = ex.execute(plan, table, {"m*": backend}, default_tier="m*",
+                         morsel_size=8, cache=cache, meter=meter, driver=d)
+        stats[d] = (backend.calls_made, cache.misses, cache.hits,
+                    meter.total.calls, res.table.n_rows)
+    assert stats["threads"] == stats["simulated"]
+    calls_made, misses, hits, metered, n_rows = stats["threads"]
+    assert calls_made == misses == metered == 8      # one bill per unique v
+    assert hits == 24
+    assert n_rows == 32
+
+
+def test_driver_equivalence_judge_and_optimizers(movie_small):
+    """Judge ratings, logical-optimizer search, and physical-optimizer tier
+    assignments are all deterministic in the outputs — so they must be
+    byte-identical across drivers."""
+    table, oracle = movie_small
+    plan = P.LogicalPlan(_chain_plan().ops[:2])
+    bad = plan.replace_op(0, plan.ops[0].with_(
+        instruction="It is NOT the case that: " + plan.ops[0].instruction))
+
+    ratings, assigns, bests = {}, {}, {}
+    for d in rt.DRIVERS:
+        ctx = rt.ExecutionContext(backends=bk.make_backends(oracle),
+                                  default_tier="m*", concurrency=8,
+                                  driver=d)
+        ratings[d] = judge_mod.Judge(ctx).rate(
+            plan, bad, table.sample(12, seed=3)).rating
+        pres = popt.optimize(plan, table, ctx,
+                             cfg=popt.PhysicalOptConfig(estimator="approx"))
+        assigns[d] = (pres.assignments, pres.scores,
+                      pres.meter.total.calls)
+        assert pres.opt_wall_s >= 0.0
+        lres = lopt.optimize(plan, table, ctx,
+                             cfg=lopt.LogicalOptConfig(n_iterations=1))
+        bests[d] = (lres.best.signature(), lres.best_cost,
+                    lres.meter.total.calls)
+    assert ratings["threads"] == pytest.approx(ratings["simulated"])
+    assert assigns["threads"] == assigns["simulated"]
+    assert bests["threads"] == bests["simulated"]
+
+
+def test_driver_threaded_wall_covers_shared_judge_runs(movie_small):
+    """A dispatcher shared across both judge sample runs reports one
+    measured wall covering both (not back-to-back accounting)."""
+    table, oracle = movie_small
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 1.",
+                   "IMDB_rating"),))
+    ctx = rt.ExecutionContext(
+        backends={"m*": SleepBackend(oracle, delay_s=0.02)},
+        default_tier="m*", concurrency=8, morsel_size=4, driver="threads")
+    j = judge_mod.Judge(ctx)
+    r = j.rate(plan, plan, table.sample(16, seed=1))
+    assert r.rating == pytest.approx(1.0)
+    # 16 rows rated twice = 32 potential calls, but the shared cache bills
+    # the second run for nothing and the pool overlaps the first; subtract
+    # the rating call's own modeled latency to isolate the execution wall
+    exec_wall = r.usage.latency_s - cost_mod.DEFAULT_TIERS["m*"].latency(4.0)
+    assert exec_wall < 16 * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Bugfix regressions
+# ---------------------------------------------------------------------------
+
+def test_driver_rank_parses_numeric_strings():
+    """Real LLMs return scores as strings; they must rank by value."""
+    t = Table({"x": ["a", "b", "c"]}, name="t")
+    op = P.Operator(P.RANK, "score the match", "x", "r")
+    ranked, _ = rt.apply_outputs(op, t, ["2", "0.5", "1"])
+    assert ranked.columns["r"] == [0, 2, 1]
+
+
+def test_driver_rank_bools_are_not_scores():
+    """bool is an int subclass: True/False outputs (filter-shaped answers)
+    must fall back to input-position ranking, not masquerade as 1/0."""
+    t = Table({"x": ["a", "b", "c"]}, name="t")
+    op = P.Operator(P.RANK, "score the match", "x", "r")
+    ranked, _ = rt.apply_outputs(op, t, [True, False, True])
+    # positional fallback (0,1,2) reversed — NOT [0, 2, 1] (True-first)
+    assert ranked.columns["r"] == [2, 1, 0]
+    garbage, _ = rt.apply_outputs(op, t, ["n/a", "n/a", "n/a"])
+    assert ranked.columns["r"] == garbage.columns["r"]
+
+
+def test_driver_unanswerable_reduce_keeps_result_kind(movie_small):
+    """A reduce whose truth is unanswerable yields scalar=None; the result
+    must still classify as a reduce (value() is None, not the table)."""
+    table, oracle = movie_small
+    plan = P.LogicalPlan((
+        P.Operator(P.REDUCE, "Frobnicate the blorps.", "Title"),))
+    for d in rt.DRIVERS:
+        res = ex.execute(plan, table, perfect_backends(oracle),
+                         default_tier="m*", driver=d)
+        assert res.is_reduce
+        assert res.value() is None
+        assert res.table is None
+
+
+def test_driver_judge_rates_none_reduce_pair_consistent(movie_small):
+    table, oracle = movie_small
+    backends = perfect_backends(oracle)
+    none_reduce = P.LogicalPlan((
+        P.Operator(P.REDUCE, "Frobnicate the blorps.", "Title"),))
+    table_plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 1.",
+                   "IMDB_rating"),))
+    j = judge_mod.Judge(backends, exec_tier="m*")
+    sample = table.sample(8, seed=0)
+    # two None-scalar reduces are consistent, not a kind mismatch
+    assert j.rate(none_reduce, none_reduce, sample).rating \
+        == pytest.approx(1.0)
+    r = j.rate(table_plan, none_reduce, sample)
+    assert r.rating == 0.0 and r.detail == "result-kind mismatch"
+
+
+def test_driver_optimizer_sample_flow_shares_execution_cache(movie_small):
+    """The physical optimizer's sample flow now routes through
+    runtime.run_llm_op with the execution cache and batch size, so the
+    final execution reuses (never re-bills) the optimizer's sample calls."""
+    table, oracle = movie_small
+    plan = P.LogicalPlan(_chain_plan().ops[:2])
+    ctx = rt.ExecutionContext(backends=bk.make_backends(oracle),
+                              default_tier="m*", cache=rt.OutputCache())
+    pres = popt.optimize(plan, table, ctx)
+    misses_after_opt = ctx.cache.misses
+    assert misses_after_opt > 0          # sample flow populated the cache
+    res = ex.execute(pres.plan, table, ctx)
+    assert res.table is not None
+    assert ctx.cache.hits > 0            # execution reused sample-flow work
+
+
+def test_driver_serve_reduced_flag_is_reachable():
+    """--reduced was store_true with default=True: full-size configs were
+    unreachable. BooleanOptionalAction restores --no-reduced."""
+    from repro.launch import serve
+    ap = serve.build_parser()
+    assert ap.parse_args([]).reduced is True
+    assert ap.parse_args(["--no-reduced"]).reduced is False
+    assert ap.parse_args(["--reduced"]).reduced is True
