@@ -1,0 +1,121 @@
+"""Cross-morsel batch coalescing benchmark — the repo's perf trajectory.
+
+A filter -> map -> filter pipeline (selective filters emit ragged morsels)
+runs at ``batch_size in {1, 4, 8}`` with coalescing on and off:
+
+* simulated driver: LLM calls, usd, and event-model wall per config, with
+  byte-identical results checked between the coalesced and whole-table
+  groupings;
+* threads driver: *measured* wall over a real sleeping backend at
+  ``batch_size=8``, coalesced vs per-morsel — coalescing must cut calls
+  by >= 30% on this pipeline without regressing measured wall.
+
+Writes ``artifacts/bench/BENCH_coalesce.json`` (one row per config).
+"""
+from __future__ import annotations
+
+from repro.core import backends as bk
+from repro.core import executor as ex
+from repro.core import plan as plan_ir
+from repro.data import load_dataset
+from repro.testing import SleepBackend
+
+from benchmarks import common
+
+MORSEL = 8
+
+
+def _pipeline():
+    return plan_ir.LogicalPlan((
+        plan_ir.Operator(plan_ir.FILTER, "The rating is higher than 8.",
+                         "IMDB_rating"),
+        plan_ir.Operator(plan_ir.MAP, "According to the movie plot, "
+                         "extract the genre(s) of each movie.", "Plot",
+                         "Genre"),
+        plan_ir.Operator(plan_ir.FILTER, "The movie is directed by "
+                         "Christopher Nolan.", "Director"),
+    ))
+
+
+def _result_key(res):
+    t = res.table
+    return (tuple(t.columns[ex.ROWID]), tuple(map(str, t.columns["Genre"])))
+
+
+def run(max_rows: int = 96, sleep_s: float = 0.05):
+    table, oracle = load_dataset("movie", max_rows=max_rows)
+    plan = _pipeline()
+    rows = []
+
+    # -- simulated driver: deterministic calls/usd/wall sweep -------------
+    results = {}
+    for batch in (1, 4, 8):
+        for coalesce in (False, True):
+            meter = bk.UsageMeter()
+            res = ex.execute(plan, table, bk.make_backends(oracle),
+                             default_tier="m*", batch_size=batch,
+                             morsel_size=MORSEL, meter=meter,
+                             coalesce=coalesce, driver="simulated")
+            results[(batch, coalesce)] = _result_key(res)
+            rows.append({
+                "driver": "simulated", "batch": batch,
+                "coalesce": coalesce, "calls": meter.total.calls,
+                "usd": round(meter.total.usd, 6),
+                "wall_s": round(res.wall_s, 4),
+                "stats": res.coalesce_stats})
+        if results[(batch, True)] != results[(batch, False)]:
+            raise AssertionError(
+                f"coalescing changed the answer at batch={batch}")
+
+    # -- threads driver: measured wall over a really-sleeping backend -----
+    for coalesce in (False, True):
+        walls, meter, res = [], None, None
+        for _ in range(3):          # median of 3: thread scheduling jitter
+            backend = SleepBackend(oracle, delay_s=sleep_s)
+            meter = bk.UsageMeter()
+            res = ex.execute(plan, table, {"m*": backend},
+                             default_tier="m*", batch_size=8,
+                             morsel_size=MORSEL, meter=meter,
+                             concurrency=8, coalesce=coalesce,
+                             driver="threads")
+            walls.append(res.wall_s)
+        rows.append({
+            "driver": "threads", "batch": 8, "coalesce": coalesce,
+            "calls": meter.total.calls, "usd": round(meter.total.usd, 6),
+            "wall_s": round(sorted(walls)[1], 4),
+            "walls": [round(w, 4) for w in walls],
+            "stats": res.coalesce_stats})
+
+    def row_of(driver, batch, coalesce):
+        return next(r for r in rows if r["driver"] == driver
+                    and r["batch"] == batch and r["coalesce"] == coalesce)
+
+    base = row_of("simulated", 8, False)
+    coal = row_of("simulated", 8, True)
+    reduction = 1.0 - coal["calls"] / base["calls"]
+    t_base = row_of("threads", 8, False)
+    t_coal = row_of("threads", 8, True)
+    summary = {
+        "driver": "summary", "batch": 8, "coalesce": True,
+        "calls": coal["calls"],
+        "call_reduction_vs_per_morsel": round(reduction, 4),
+        "threads_wall_base_s": t_base["wall_s"],
+        "threads_wall_coalesced_s": t_coal["wall_s"],
+    }
+    rows.append(summary)
+    common.emit("BENCH_coalesce", rows)
+    print(common.fmt_table(
+        [r for r in rows if r["driver"] != "summary"],
+        ["driver", "batch", "coalesce", "calls", "usd", "wall_s"]))
+    print(f"[bench_coalesce] batch=8 call reduction vs per-morsel: "
+          f"{100 * reduction:.1f}%  threads wall {t_base['wall_s']:.3f}s "
+          f"-> {t_coal['wall_s']:.3f}s")
+    if reduction < 0.30:
+        raise AssertionError(
+            f"coalescing reduced calls by only {100 * reduction:.1f}% "
+            f"(target >= 30%)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -51,6 +51,11 @@ LLAVA_PIXEL_LIMIT = 178_956_970
 # ``benchmarks.run --driver`` overrides it process-wide.
 DRIVER = "simulated"
 
+# cross-morsel batch coalescing for every system analog (only active with
+# batch_size > 1). ``benchmarks.run --no-coalesce`` turns it off
+# process-wide to measure the per-morsel ragged-batch baseline.
+COALESCE = True
+
 
 def set_driver(name: str) -> None:
     global DRIVER
@@ -59,10 +64,20 @@ def set_driver(name: str) -> None:
     DRIVER = name
 
 
+def set_coalesce(flag: bool) -> None:
+    global COALESCE
+    COALESCE = bool(flag)
+
+
 def add_driver_arg(ap) -> None:
+    import argparse
     ap.add_argument("--driver", choices=rt.DRIVERS, default=None,
                     help="execution driver for all system analogs "
                          "(default: simulated)")
+    ap.add_argument("--coalesce", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="cross-morsel batch coalescing for batched runs "
+                         "(default: on)")
 
 
 def env(dataset: str, max_rows: int = 0, violation_rate: float = 0.03,
@@ -122,7 +137,7 @@ class RunResult:
 def run_nirvana(q, table, backends, perfect, *, logical=True, physical=True,
                 rules=None, estimator="approx", n_iterations=3, seed=0,
                 rewriter=None, batch_size=1, concurrency=16,
-                driver=None) -> RunResult:
+                driver=None, coalesce=None, linger=None) -> RunResult:
     plan = q.plan_for(table)
     truth = truth_of(plan, table, perfect)
     # one ExecutionContext for the whole pipeline (optimizers meter their
@@ -130,7 +145,10 @@ def run_nirvana(q, table, backends, perfect, *, logical=True, physical=True,
     ctx = rt.ExecutionContext(backends=backends, default_tier="m*",
                               concurrency=concurrency,
                               batch_size=batch_size,
-                              driver=driver or DRIVER)
+                              driver=driver or DRIVER,
+                              coalesce=COALESCE if coalesce is None
+                              else coalesce,
+                              linger_s=linger)
     opt_wall = opt_usd = 0.0
     lres = pres = None
     if logical:

@@ -13,7 +13,8 @@ import time
 import traceback
 
 from benchmarks import common
-from benchmarks import (appendix_d_search, fig9_fig10_breakdown,
+from benchmarks import (appendix_d_search, bench_coalesce,
+                        fig9_fig10_breakdown,
                         fig13_cardinality, fig14_batch_prompting,
                         roofline_report, table2_capability,
                         table4_runtime_cost, table5_quality,
@@ -21,6 +22,8 @@ from benchmarks import (appendix_d_search, fig9_fig10_breakdown,
                         table8_semantics_ablation, table9_smart)
 
 BENCHES = [
+    ("bench_coalesce", lambda q: bench_coalesce.run(
+        max_rows=48 if q else 96)),
     ("table2_capability", lambda q: table2_capability.run(
         n=200 if q else 500)),
     ("table4_runtime_cost", lambda q: table4_runtime_cost.run(
@@ -54,6 +57,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.driver:
         common.set_driver(args.driver)
+    if args.coalesce is not None:
+        common.set_coalesce(args.coalesce)
 
     summary = []
     n_fail = 0

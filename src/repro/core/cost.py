@@ -114,11 +114,15 @@ class PlanCost:
 
 def op_cost(op: plan_ir.Operator, rows_in: float, tier: TierSpec,
             avg_value_tokens: float = 60.0,
-            concurrency: int = 1) -> OpCost:
+            concurrency: int = 1, batch_size: int = 1) -> OpCost:
     """Cost of one operator over `rows_in` records.
 
-    LLM ops: one call per record (reduce: hierarchical tree over batches of
-    ~32 values per call). UDF ops: zero LLM cost, negligible latency.
+    LLM ops: ``ceil(rows / batch_size)`` calls — the executor's batch
+    coalescer packs surviving rows across morsel boundaries, so the model
+    prices whole-table batching, not per-morsel ragged ceilings. Batched
+    records share the instruction prompt and the call's output budget.
+    (Reduce: hierarchical tree over batches of ~32 values per call.)
+    UDF ops: zero LLM cost, negligible latency.
     """
     rows_out = rows_in * op.selectivity if op.kind == plan_ir.FILTER \
         else (1.0 if op.kind == plan_ir.REDUCE else rows_in)
@@ -139,9 +143,11 @@ def op_cost(op: plan_ir.Operator, rows_in: float, tier: TierSpec,
         c.tok_in = calls * (ins_tok + batch * avg_value_tokens * 0.5)
         c.tok_out = calls * OUT_TOKENS[op.kind]
     else:
-        c.llm_calls = rows_in
-        c.tok_in = rows_in * (ins_tok + avg_value_tokens)
-        c.tok_out = rows_in * OUT_TOKENS[op.kind]
+        b = max(1, int(batch_size))
+        calls = math.ceil(rows_in / b) if rows_in > 0 else 0.0
+        c.llm_calls = float(calls)
+        c.tok_in = calls * ins_tok + rows_in * avg_value_tokens
+        c.tok_out = calls * OUT_TOKENS[op.kind]
     c.usd = tier.usd(c.tok_in, c.tok_out)
     per_call_out = c.tok_out / max(c.llm_calls, 1.0)
     c.latency_s = c.llm_calls * tier.latency(per_call_out)
@@ -152,14 +158,15 @@ def plan_cost(plan: plan_ir.LogicalPlan, n_rows: int,
               tiers: Optional[Dict[str, TierSpec]] = None,
               default_tier: str = "m*",
               avg_value_tokens: float = 60.0,
-              concurrency: int = 16) -> PlanCost:
+              concurrency: int = 16, batch_size: int = 1) -> PlanCost:
     """Estimate a full plan: record counts flow through selectivities."""
     tiers = tiers or DEFAULT_TIERS
     rows = float(n_rows)
     total = PlanCost(per_op=[])
     for op in plan.ops:
         tier = tiers[op.tier or default_tier]
-        c = op_cost(op, rows, tier, avg_value_tokens)
+        c = op_cost(op, rows, tier, avg_value_tokens,
+                    batch_size=batch_size)
         total.per_op.append(c)
         total.llm_calls += c.llm_calls
         total.tok_in += c.tok_in

@@ -21,12 +21,21 @@ Reduce and rank are pipeline barriers — they need every surviving row.
   pools and morsel chains advance concurrently, so independent operators'
   morsels genuinely overlap. ``wall_s`` is **measured** wall time.
 
+With ``batch_size > 1`` and coalescing enabled (``ctx.coalesce``, the
+default), streamable LLM operators run through a
+``runtime.BatchCoalescer``: each morsel submits its surviving rows into a
+per-operator accumulation queue and receives a *future* that resolves as
+soon as the batches containing its rows flush — so downstream morsels
+still start early, but batch slots fill across morsel boundaries
+(``ceil(survivors/batch)`` calls, like whole-table batching, instead of
+``sum(ceil(s_i/batch))`` per-morsel ceilings).
+
 Monetary cost comes from tier token prices; both axes accumulate in a
 UsageMeter so benchmarks can break costs down per model tier (paper
-Fig. 10). Neither morsel pipelining nor the driver changes the answer —
-results, call counts, and per-tier meter totals are identical across
-barrier/morsel and simulated/threaded execution (with the default
-``batch_size=1``; larger batches fill within morsels).
+Fig. 10). Neither morsel pipelining, coalescing, nor the driver changes
+the answer — results, call counts, and per-tier meter totals are
+identical across barrier/morsel/coalesced and simulated/threaded
+execution.
 """
 from __future__ import annotations
 
@@ -65,6 +74,8 @@ class ExecutionResult:
     # crashed/unanswerable reduce legitimately yields ``scalar=None`` and
     # sniffing ``scalar is not None`` would misclassify the query's kind
     is_reduce: bool = False
+    # BatchCoalescer.stats for this run (None when coalescing was inactive)
+    coalesce_stats: Optional[dict] = None
 
     def value(self):
         """The query answer: reduce scalar, else the surviving table."""
@@ -90,6 +101,50 @@ def _merge(parts: List[Tuple[Table, float]]) -> Tuple[Table, float]:
     return (tables[0] if len(tables) == 1 else Table.concat(tables)), ready
 
 
+class _PendingMorsel:
+    """A morsel whose LLM outputs are still inside the batch coalescer.
+
+    The chain carries this placeholder instead of a table; the *next*
+    stage that needs the rows forces it (waits on the coalescer future and
+    folds the outputs in). Deferring the wait downstream keeps submission
+    tasks non-blocking, which preserves the chain pool's FIFO liveness
+    argument: a submitter never holds a worker while waiting on a batch
+    another queued task must complete."""
+
+    __slots__ = ("op", "tbl", "fut")
+
+    def __init__(self, op: plan_ir.Operator, tbl: Table, fut):
+        self.op = op
+        self.tbl = tbl
+        self.fut = fut
+
+
+class _FailedMorsel:
+    """Poison value carried down a morsel chain after a failure while
+    coalescing is active. Raising inside the chain would leave downstream
+    accumulation queues short of their morsel-boundary watermark — and
+    every *other* morsel's future would then wait forever — so the error
+    flows as a value instead: each later step still advances its group's
+    watermark with an empty submission, and the exception re-raises at the
+    next point the morsel is forced (barrier or final merge)."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+def _force(value, ready: float) -> Tuple[Table, float]:
+    """Materialize a (possibly pending) morsel into its output table."""
+    if isinstance(value, _FailedMorsel):
+        raise value.exc
+    if isinstance(value, _PendingMorsel):
+        outs, finish = value.fut.result()
+        tbl, _ = rt.apply_outputs(value.op, value.tbl, outs)
+        return tbl, max(ready, finish)
+    return value, ready
+
+
 def execute(plan: plan_ir.LogicalPlan, table: Table,
             backends, *, default_tier: Optional[str] = None,
             concurrency: Optional[int] = None,
@@ -98,6 +153,8 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
             meter: Optional[bk.UsageMeter] = None,
             morsel_size: Optional[int] = None,
             driver: Optional[str] = None,
+            coalesce: Optional[bool] = None,
+            linger_s: Optional[float] = None,
             scheduler: Optional[rt.EventScheduler] = None,
             dispatcher: Optional[rt.Dispatcher] = None
             ) -> ExecutionResult:
@@ -119,7 +176,9 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
                               ("batch_size", batch_size),
                               ("cache", cache), ("meter", meter),
                               ("morsel_size", morsel_size),
-                              ("driver", driver))
+                              ("driver", driver),
+                              ("coalesce", coalesce),
+                              ("linger_s", linger_s))
             if v is not None}
     ctx = rt.as_context(backends, **over)
 
@@ -144,6 +203,12 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
     is_reduce = False
     rows_lock = threading.Lock()
     rows_processed = [0.0]
+    coal: Optional[rt.BatchCoalescer] = None
+    if ctx.coalesce and ctx.batch_size > 1 and any(
+            op.udf is None and op.kind in (plan_ir.FILTER, plan_ir.MAP)
+            for op in plan.ops):
+        coal = rt.BatchCoalescer(disp, meter, batch_size=ctx.batch_size,
+                                 cache=ctx.cache, linger_s=ctx.linger_s)
 
     def llm_calls(op, values, ready):
         """Dispatch one operator over one morsel's values."""
@@ -157,58 +222,98 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
             rows_processed[0] += len(values)
         return outs, finish
 
-    def step(op, tbl, ready):
+    def step(op, group, idx, value, ready):
         """Advance one morsel through one streamable (filter/map) operator;
-        runs on a chain-pool thread under the threaded driver."""
-        if tbl.n_rows == 0:
-            # an upstream filter emptied this morsel: maps must still
-            # define their output column (downstream reads it)
-            if op.kind == plan_ir.MAP:
-                tbl = tbl.with_column(op.output_column, [])
-            return tbl, ready
-        values = tbl.resolve(op.input_column)
-        if op.udf is not None:
-            # host UDF morsels pipeline against LLM work but serialize
-            # against each other (one Python process)
-            (out_tbl, _), finish = disp.run_host(
-                lambda: rt.run_udf_op(op, tbl, values), tbl.n_rows,
-                ready_s=ready)
-            return out_tbl, finish
-        outs, finish = llm_calls(op, values, ready)
-        out_tbl, _ = rt.apply_outputs(op, tbl, outs)
-        return out_tbl, finish
-
-    for op in plan.ops:
-        if op.kind in (plan_ir.REDUCE, plan_ir.RANK):
-            # pipeline barrier: needs every surviving row
-            tbl, ready = _merge([p.result() for p in parts])
-            if op.kind == plan_ir.RANK and tbl.n_rows == 0:
-                parts = [disp.done(tbl, ready)]
-                continue
-            values = tbl.columns.get(op.input_column, []) \
-                if tbl.n_rows == 0 else tbl.resolve(op.input_column)
+        runs on a chain-pool thread under the threaded driver. ``value``
+        may be a _PendingMorsel from an upstream coalesced operator, or a
+        _FailedMorsel poison (then only keep the watermark moving)."""
+        if isinstance(value, _FailedMorsel):
+            if group is not None:
+                group.submit(idx, [], ready)
+            return value, ready
+        try:
+            tbl, ready = _force(value, ready)
+            if group is not None:
+                # coalesced LLM operator: hand the surviving rows to the
+                # accumulation queue (empty morsels still advance the
+                # watermark) and resume downstream when their batches flush
+                values = tbl.resolve(op.input_column) if tbl.n_rows else []
+                with rows_lock:
+                    rows_processed[0] += len(values)
+                return (_PendingMorsel(op, tbl,
+                                       group.submit(idx, values, ready)),
+                        ready)
+            if tbl.n_rows == 0:
+                # an upstream filter emptied this morsel: maps must still
+                # define their output column (downstream reads it)
+                if op.kind == plan_ir.MAP:
+                    tbl = tbl.with_column(op.output_column, [])
+                return tbl, ready
+            values = tbl.resolve(op.input_column)
             if op.udf is not None:
-                (tbl, out), finish = disp.run_host(
-                    lambda t=tbl, v=values: rt.run_udf_op(op, t, v),
-                    tbl.n_rows, ready_s=ready)
-            else:
-                outs, finish = llm_calls(op, values, ready)
-                tbl, out = rt.apply_outputs(op, tbl, outs)
-            if op.kind == plan_ir.REDUCE:
-                scalar = out
-                is_reduce = True
-            # everything downstream restarts from the barrier's output
-            parts = [disp.done(t, finish) for t, _ in
-                     _split_morsels(tbl, ctx.morsel_size, ctx.batch_size)]
-            continue
+                # host UDF morsels pipeline against LLM work but serialize
+                # against each other (one Python process)
+                (out_tbl, _), finish = disp.run_host(
+                    lambda: rt.run_udf_op(op, tbl, values), tbl.n_rows,
+                    ready_s=ready)
+                return out_tbl, finish
+            outs, finish = llm_calls(op, values, ready)
+            out_tbl, _ = rt.apply_outputs(op, tbl, outs)
+            return out_tbl, finish
+        except BaseException as e:
+            if coal is None:
+                raise               # no accumulation queues to keep alive
+            if group is not None:
+                group.submit(idx, [], ready)
+            return _FailedMorsel(e), ready
 
-        # streamable operator (filter / map): advance each morsel
-        parts = [disp.defer(p, lambda tbl, ready, op=op: step(op, tbl, ready))
-                 for p in parts]
+    try:
+        for op in plan.ops:
+            if op.kind in (plan_ir.REDUCE, plan_ir.RANK):
+                # pipeline barrier: needs every surviving row
+                tbl, ready = _merge([_force(*p.result()) for p in parts])
+                if op.kind == plan_ir.RANK and tbl.n_rows == 0:
+                    parts = [disp.done(tbl, ready)]
+                    continue
+                values = tbl.columns.get(op.input_column, []) \
+                    if tbl.n_rows == 0 else tbl.resolve(op.input_column)
+                if op.udf is not None:
+                    (tbl, out), finish = disp.run_host(
+                        lambda t=tbl, v=values: rt.run_udf_op(op, t, v),
+                        tbl.n_rows, ready_s=ready)
+                else:
+                    outs, finish = llm_calls(op, values, ready)
+                    tbl, out = rt.apply_outputs(op, tbl, outs)
+                if op.kind == plan_ir.REDUCE:
+                    scalar = out
+                    is_reduce = True
+                # everything downstream restarts from the barrier's output
+                parts = [disp.done(t, finish) for t, _ in
+                         _split_morsels(tbl, ctx.morsel_size,
+                                        ctx.batch_size)]
+                continue
 
-    out_table, _ = _merge([p.result() for p in parts])
+            # streamable operator (filter / map): advance each morsel
+            group = None
+            if coal is not None and op.udf is None:
+                backend = ctx.backend(op.tier)
+                group = coal.open(op, backend, backend.tier.name,
+                                  expected=len(parts))
+            parts = [
+                disp.defer(p, lambda value, ready, op=op, group=group, i=i:
+                           step(op, group, i, value, ready))
+                for i, p in enumerate(parts)]
+
+        out_table, _ = _merge([_force(*p.result()) for p in parts])
+    finally:
+        if coal is not None:
+            # normal exit: a no-op (every group is watermarked and
+            # drained). On error it fails pending futures so blocked chain
+            # tasks unwind before the dispatcher's pool shutdown.
+            coal.close()
     return ExecutionResult(
         table=None if is_reduce else out_table,
         scalar=scalar, meter=meter, wall_s=disp.wall_s,
         cpu_s=time.perf_counter() - t0, rows_processed=rows_processed[0],
-        is_reduce=is_reduce)
+        is_reduce=is_reduce,
+        coalesce_stats=dict(coal.stats) if coal is not None else None)

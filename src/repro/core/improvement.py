@@ -51,12 +51,19 @@ class OutputStore:
     def __init__(self, backends: Dict[str, bk.Backend],
                  op: plan_ir.Operator, values: Sequence,
                  meter: Optional[bk.UsageMeter] = None,
-                 dispatcher: Optional["rt.Dispatcher"] = None):
+                 dispatcher: Optional["rt.Dispatcher"] = None,
+                 batch_size: int = 1):
         self.backends = backends
         self.op = op
         self.values = list(values)
         self.meter = meter if meter is not None else bk.UsageMeter()
         self.dispatcher = dispatcher
+        # batch prompting for the scoring sweeps: an operator's evaluation
+        # on k records is priced at ceil(k/batch) calls — the same batch
+        # size the executor will run at, so scores *and* overhead are
+        # measured under execution conditions (batch accuracy penalty
+        # included), making tier choice batch-aware
+        self.batch_size = max(1, int(batch_size))
         self._out: Dict[str, Dict[int, object]] = {t: {} for t in backends}
         self._eq: Dict[tuple, bool] = {}
 
@@ -73,7 +80,7 @@ class OutputStore:
             if self.dispatcher is not None else None
         outs = rt.run_backend_calls(
             self.op, [self.values[i] for i in missing], backend,
-            self.meter, batch_size=1, fanout=fan)
+            self.meter, batch_size=self.batch_size, fanout=fan)
         for i, o in zip(missing, outs):
             self._out[tier][i] = o
 
@@ -251,10 +258,10 @@ def improvement_scores(backends: Dict[str, bk.Backend],
                        method: str = "approx",
                        meter: Optional[bk.UsageMeter] = None,
                        max_cond_eval: Optional[int] = None,
-                       dispatcher: Optional["rt.Dispatcher"] = None
-                       ) -> ImprovementResult:
+                       dispatcher: Optional["rt.Dispatcher"] = None,
+                       batch_size: int = 1) -> ImprovementResult:
     store = OutputStore(backends, op, values, meter=meter,
-                        dispatcher=dispatcher)
+                        dispatcher=dispatcher, batch_size=batch_size)
     if method == "approx":
         return improvement_approx(store, max_cond_eval=max_cond_eval)
     return ESTIMATORS[method](store)

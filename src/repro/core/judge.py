@@ -94,7 +94,10 @@ class Judge:
     rating run against **one** dispatcher, so they share the same worker
     pool (the paper's 16 coroutines serve the verifier too) — simulated or
     real threads, per the context's ``driver`` — instead of being
-    accounted back-to-back."""
+    accounted back-to-back. The context's ``batch_size``/``coalesce``/
+    ``linger_s`` flow through unchanged, so with batching enabled each
+    sample run packs its morsels through a ``runtime.BatchCoalescer`` and
+    the verifier pays coalesced (not per-morsel) call counts."""
     backends: "Dict[str, bk.Backend] | rt.ExecutionContext"
     judge_tier: str = "m*"          # the tier priced for the rating call
     exec_tier: str = "m*"           # backend used to execute sample plans

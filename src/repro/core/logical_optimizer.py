@@ -113,9 +113,12 @@ def optimize(plan: plan_ir.LogicalPlan, table: Table,
     wall = 0.0
 
     def plan_cost_of(p: plan_ir.LogicalPlan) -> float:
+        # batch-aware: candidate costs price ceil(rows/batch) coalesced
+        # calls, so rewrites are judged at the batch size they will run at
         return cost_mod.plan_cost(p, table.n_rows,
                                   default_tier=ctx.default_tier,
-                                  concurrency=ctx.concurrency).cost
+                                  concurrency=ctx.concurrency,
+                                  batch_size=ctx.batch_size).cost
 
     c0 = plan_cost_of(plan)
     cands: List[Candidate] = [Candidate(plan, c0, 1.0, None, "init")]
@@ -181,7 +184,8 @@ def optimize_beam(plan: plan_ir.LogicalPlan, table: Table,
     def plan_cost_of(p):
         return cost_mod.plan_cost(p, table.n_rows,
                                   default_tier=ctx.default_tier,
-                                  concurrency=ctx.concurrency).cost
+                                  concurrency=ctx.concurrency,
+                                  batch_size=ctx.batch_size).cost
 
     c0 = plan_cost_of(plan)
     cands: List[Candidate] = [Candidate(plan, c0, 1.0, None, "init")]

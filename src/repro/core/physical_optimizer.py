@@ -11,6 +11,13 @@ The sample flows through the plan operator-by-operator with the already-
 selected backends (matching the paper's optimize-then-execute pipeline in
 Fig. 4), so downstream operators are scored on realistic inputs.
 
+Batch awareness: with ``ctx.batch_size > 1`` the scoring sweeps batch
+records the way coalesced execution will — an operator's evaluation on a
+tier costs ``ceil(sample / batch_size)`` calls (not one call per record),
+and the improvement scores reflect the batch-prompting accuracy penalty —
+so both the tier choice and the reported optimization overhead match the
+batched execution the plan is headed for.
+
 Sync vs async (Table 9): every backend call lands in the meter's call log
 and runs through the context's dispatcher (``runtime.Dispatcher``). Under
 the simulated driver, ``async`` places each operator's scoring calls
@@ -106,11 +113,15 @@ def _optimize(plan, sample, ctx, cfg, meter, disp) -> PhysicalOptResult:
             continue
         values = cur.resolve(op.input_column)
         if op.is_llm:
+            # batch-aware scoring: sweeps run (and are priced) at the
+            # context's batch size — ceil(sample/batch) calls per tier
+            # instead of per-record ceilings, and the scores see the batch
+            # accuracy penalty the execution will actually pay
             res = imp.improvement_scores(
                 ctx.backends, op, values, method=cfg.estimator, meter=meter,
                 max_cond_eval=(cfg.max_cond_eval
                                if cfg.estimator == "approx" else None),
-                dispatcher=disp)
+                dispatcher=disp, batch_size=ctx.batch_size)
             tier = select_tier(res.scores, cfg.delta_min)
             assignments[k] = tier
             all_scores[k] = dict(res.scores)

@@ -30,13 +30,28 @@ Four pieces:
   Results, call counts, and per-tier meter totals are identical across
   drivers: the :class:`OutputCache` is single-flight (a value computed by
   one in-flight morsel is awaited, not re-billed, by concurrent morsels)
-  and ``UsageMeter`` is lock-protected. One precise caveat: with
-  ``batch_size > 1`` AND a shared cache AND duplicate values split across
-  morsels, every unique value is still billed exactly once, but how the
-  misses *group into batched calls* depends on which morsel claims each
-  key first — so call counts can differ by a few chunk-boundary calls
-  between drivers in that corner (batch_size=1, or no cache, or no
-  cross-morsel duplicates, is exact).
+  and ``UsageMeter`` is lock-protected. With ``batch_size > 1`` the
+  :class:`BatchCoalescer` forms batches in *logical row order* (morsel
+  index, then row position) regardless of thread arrival order, and
+  cross-morsel duplicate values dedupe *before* batch formation — so the
+  grouping of misses into batched calls is deterministic and identical
+  across drivers (this closes PR 2's documented corner where duplicate
+  values could land in different batched calls per driver).
+
+* :class:`BatchCoalescer` — cross-morsel batch packing. With
+  ``batch_size > 1`` a selective upstream filter emits ragged morsels
+  whose remainder rows each burn a full batch slot downstream
+  (``sum(ceil(s_i/b)) > ceil(S/b)``). The coalescer sits between morsel
+  fan-out and the backend: per operator it buffers ready rows from
+  *different* morsels into an accumulation queue, flushes a batch the
+  moment ``batch_size`` slots fill, and flushes partial batches on a
+  morsel-boundary **watermark** (every contributing morsel has reported)
+  or after a configurable ``linger_s`` — mirroring the slot-fill logic of
+  ``engine.ContinuousBatcher``, one level up the stack. A morsel's
+  pipeline resumes as soon as the batches containing *its* rows flush (a
+  per-morsel future), so downstream operators keep pipelined start times.
+  Under the simulated driver the linger is *event-time* (deterministic);
+  under threads a timer thread flushes lingering partials in real time.
 
 * :class:`ExecutionContext` — bundles everything an execution needs
   (backends, default tier, batch size, concurrency, morsel size, driver,
@@ -219,6 +234,22 @@ class OutputCache:
                 self.misses += 1
                 out.append(("own", None))
         return out
+
+    def peek(self, k: tuple) -> Tuple[bool, Any]:
+        """Non-claiming lookup; counts a hit when present (a sequential run
+        would hit here). Used by the :class:`BatchCoalescer` at batch
+        formation so cached rows never occupy a batch slot."""
+        with self._lock:
+            if k in self.data:
+                self.hits += 1
+                return True, self.data[k]
+        return False, None
+
+    def note_hits(self, n: int = 1) -> None:
+        """Count hits resolved outside ``claim`` (coalescer followers:
+        duplicate rows answered by an in-flight batch slot)."""
+        with self._lock:
+            self.hits += n
 
     def publish(self, k: tuple, value) -> None:
         with self._lock:
@@ -639,6 +670,307 @@ DRIVERS = ("simulated", "threads")
 
 
 # ---------------------------------------------------------------------------
+# Cross-morsel batch coalescing
+# ---------------------------------------------------------------------------
+
+class _MorselState:
+    """Per-(operator, morsel) resolution buffer: row outputs fill in as the
+    batches containing them flush; ``fut`` completes with
+    ``(outs, finish_s)`` once every row is resolved."""
+
+    __slots__ = ("outs", "remaining", "finish", "fut", "_lock")
+
+    def __init__(self, n: int, ready: float):
+        self.outs: List[Any] = [None] * n
+        self.remaining = n
+        self.finish = ready
+        self.fut: Future = Future()
+        self._lock = threading.Lock()
+
+    def resolve(self, pos: int, out, finish: float) -> None:
+        with self._lock:
+            self.outs[pos] = out
+            if finish > self.finish:
+                self.finish = finish
+            self.remaining -= 1
+            done = self.remaining == 0
+        if done and not self.fut.done():
+            self.fut.set_result((self.outs, self.finish))
+
+    def fail(self, exc: BaseException) -> None:
+        if not self.fut.done():
+            try:
+                self.fut.set_exception(exc)
+            except Exception:
+                pass                      # lost a race with set_result
+
+
+class _Slot:
+    """One occupied batch slot: a leader value plus every (morsel, row)
+    resolved by it — cross-morsel duplicates attach as followers instead
+    of taking their own slot (dedupe *before* batch formation)."""
+
+    __slots__ = ("value", "key", "ready", "targets")
+
+    def __init__(self, value, key, ready: float, target):
+        self.value = value
+        self.key = key
+        self.ready = ready
+        self.targets = [target]           # [(morsel_state, row_pos)]
+
+
+class _Batch:
+    __slots__ = ("slots", "ready")
+
+    def __init__(self, slots: List[_Slot], ready: float):
+        self.slots = slots
+        self.ready = ready
+
+
+class _OpGroup:
+    """One operator's accumulation queue inside a :class:`BatchCoalescer`.
+
+    Submissions may arrive in any thread order; a reorder buffer admits
+    them into batch formation strictly by morsel index, so the batches are
+    the logical-row-order chunks whole-table batching would form —
+    deterministic, and identical across drivers."""
+
+    def __init__(self, coal: "BatchCoalescer", op, backend, tier_name: str,
+                 expected: int):
+        self.coal = coal
+        self.op = op
+        self.backend = backend
+        self.tier = tier_name
+        self.expected = max(1, int(expected))
+        self.lock = threading.Lock()
+        self.stash: Dict[int, tuple] = {}      # morsel idx -> (vals, rdy, st)
+        self.next_idx = 0
+        self.queue: List[_Slot] = []           # formation queue (partial)
+        self.queue_ready = 0.0                 # max event-ready of queue
+        self.queue_born = 0.0                  # event-ready of its 1st row
+        self.queue_since = 0.0                 # wall time queue went nonempty
+        self.inflight: Dict[tuple, _Slot] = {}  # cache key -> unresolved slot
+        self.states: List[_MorselState] = []
+        self.closed = False
+
+    # -- submission ------------------------------------------------------
+    def submit(self, idx: int, values: Sequence[Any],
+               ready: float = 0.0) -> Future:
+        """Register one morsel's surviving rows (possibly empty — empties
+        still advance the watermark); returns the morsel's future."""
+        values = list(values)
+        state = _MorselState(len(values), ready)
+        batches: List[_Batch] = []
+        with self.lock:
+            if self.closed:
+                state.fail(RuntimeError("coalescer closed"))
+                return state.fut
+            if idx < self.next_idx or idx in self.stash:
+                # duplicate submission (recovery path after a submit that
+                # itself failed): don't wedge the reorder buffer
+                state.fail(RuntimeError(f"morsel {idx} already submitted"))
+                return state.fut
+            self.states.append(state)
+            self.stash[idx] = (values, ready, state)
+            self._advance(batches)
+        self._execute(batches)
+        return state.fut
+
+    def _advance(self, batches: List[_Batch]) -> None:
+        """Admit contiguous stashed morsels (reorder buffer) into batch
+        formation; cut full batches, the watermark partial, and — under
+        the simulated driver — event-time linger partials. Lock held."""
+        linger = self.coal.linger_s
+        while self.next_idx in self.stash:
+            values, ready, state = self.stash.pop(self.next_idx)
+            self.next_idx += 1
+            if (linger is not None and self.queue
+                    and self.coal.disp.kind == "simulated"
+                    and ready > self.queue_born + linger):
+                # the next rows arrive (event time) after the partial's
+                # linger deadline — anchored to the *oldest* queued row,
+                # so the deadline cannot slide forward with each arrival
+                # (mirrors the threads timer, which measures from
+                # queue_since): launch the partial at the deadline
+                self._cut(batches, partial=True,
+                          launch=self.queue_born + linger)
+            for pos, v in enumerate(values):
+                self._enqueue_row(state, pos, v, ready, batches)
+            if not values:
+                state.fut.set_result(([], ready))
+        if self.next_idx >= self.expected and self.queue:
+            self._cut(batches, partial=len(self.queue) < self.coal.batch)
+
+    def _enqueue_row(self, state: _MorselState, pos: int, v, ready: float,
+                     batches: List[_Batch]) -> None:
+        cache = self.coal.cache
+        key = None
+        if cache is not None:
+            key = cache.key(self.op, self.tier, self.coal.batch, v)
+            lead = self.inflight.get(key)
+            if lead is not None:           # duplicate of a queued/in-flight
+                lead.targets.append((state, pos))   # row: follow, no slot
+                cache.note_hits(1)
+                self.coal.stats["dedup_follows"] += 1
+                return
+            hit, val = cache.peek(key)
+            if hit:
+                state.resolve(pos, val, ready)
+                return
+        slot = _Slot(v, key, ready, (state, pos))
+        if key is not None:
+            self.inflight[key] = slot
+        if not self.queue:
+            self.queue_since = time.perf_counter()
+            self.queue_born = ready
+        self.queue.append(slot)
+        if ready > self.queue_ready:
+            self.queue_ready = ready
+        self.coal.stats["rows"] += 1
+        if len(self.queue) >= self.coal.batch:
+            self._cut(batches, partial=False)
+
+    def _cut(self, batches: List[_Batch], partial: bool,
+             launch: Optional[float] = None) -> None:
+        slots, self.queue = self.queue, []
+        ready = launch if launch is not None else \
+            max((s.ready for s in slots), default=0.0)
+        self.queue_ready = 0.0
+        batches.append(_Batch(slots, ready))
+        self.coal.stats["flushes"] += 1
+        if partial:
+            self.coal.stats["partial_flushes"] += 1
+
+    # -- flush execution -------------------------------------------------
+    def _execute(self, batches: List[_Batch]) -> None:
+        """Run flushed batches outside the group lock. Under threads,
+        several batches cut by one submission run concurrently on
+        ephemeral threads — each still routes its backend call through the
+        tier's bounded pool, so serving quotas hold and cache waits never
+        occupy a tier worker (same liveness structure as morsel chains)."""
+        if not batches:
+            return
+        if len(batches) == 1 or self.coal.disp.kind != "threads":
+            for b in batches:
+                self._run_batch(b)
+            return
+        threads = [threading.Thread(target=self._run_batch, args=(b,),
+                                    daemon=True) for b in batches]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    def _run_batch(self, b: _Batch) -> None:
+        try:
+            outs, finish = self.coal.disp.run_llm(
+                self.op, [s.value for s in b.slots], self.backend,
+                self.tier, self.coal.meter, batch_size=self.coal.batch,
+                cache=self.coal.cache, ready_s=b.ready)
+        except BaseException as e:        # backend failure: fail the rows,
+            self._fail_batch(b, e)        # don't hang downstream morsels
+            return
+        with self.lock:
+            for s in b.slots:
+                if s.key is not None:
+                    self.inflight.pop(s.key, None)
+            targets = [(s.targets[:], out) for s, out in zip(b.slots, outs)]
+        for tgts, out in targets:
+            for state, pos in tgts:
+                state.resolve(pos, out, finish)
+
+    def _fail_batch(self, b: _Batch, exc: BaseException) -> None:
+        with self.lock:
+            for s in b.slots:
+                if s.key is not None:
+                    self.inflight.pop(s.key, None)
+            targets = [t for s in b.slots for t in s.targets]
+        for state, _ in targets:
+            state.fail(exc)
+
+    def flush_expired(self, now: float) -> None:
+        """Timer hook (threads driver): flush a partial batch whose oldest
+        row has waited longer than ``linger_s``."""
+        batches: List[_Batch] = []
+        with self.lock:
+            if (self.queue and self.coal.linger_s is not None
+                    and now - self.queue_since >= self.coal.linger_s):
+                self._cut(batches, partial=len(self.queue) < self.coal.batch)
+        self._execute(batches)
+
+    def close(self, exc: Optional[BaseException] = None) -> None:
+        with self.lock:
+            self.closed = True
+            states = self.states
+        err = exc or RuntimeError("coalescer closed with pending rows")
+        for st in states:
+            if not st.fut.done():
+                st.fail(err)
+
+
+class BatchCoalescer:
+    """Cross-morsel batch packing for one execution (see module docstring).
+
+    One instance serves one executor run; ``open`` registers an operator
+    with its expected contributor count (= number of morsels entering it),
+    and each morsel ``submit``s its rows once. ``stats`` records flushes,
+    partial flushes, rows slotted, and follower dedupes — benchmarks and
+    tests read it from ``ExecutionResult.coalesce_stats``."""
+
+    def __init__(self, dispatcher: Dispatcher, meter: bk.UsageMeter, *,
+                 batch_size: int, cache: Optional[OutputCache] = None,
+                 linger_s: Optional[float] = None):
+        self.disp = dispatcher
+        self.meter = meter
+        self.batch = max(1, int(batch_size))
+        self.cache = cache
+        self.linger_s = linger_s
+        self.stats = {"flushes": 0, "partial_flushes": 0, "rows": 0,
+                      "dedup_follows": 0}
+        self._groups: List[_OpGroup] = []
+        self._lock = threading.Lock()
+        self._timer: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    def open(self, op, backend, tier_name: str, expected: int) -> _OpGroup:
+        g = _OpGroup(self, op, backend, tier_name, expected)
+        with self._lock:
+            self._groups.append(g)
+        if self.linger_s is not None and self.disp.kind == "threads":
+            self._ensure_timer()
+        return g
+
+    def _ensure_timer(self) -> None:
+        with self._lock:
+            if self._timer is None:
+                self._timer = threading.Thread(target=self._linger_loop,
+                                               name="coalesce-linger",
+                                               daemon=True)
+                self._timer.start()
+
+    def _linger_loop(self) -> None:
+        tick = max(0.002, (self.linger_s or 0.01) / 4.0)
+        while not self._stop.wait(tick):
+            with self._lock:
+                groups = list(self._groups)
+            now = time.perf_counter()
+            for g in groups:
+                g.flush_expired(now)
+
+    def close(self, exc: Optional[BaseException] = None) -> None:
+        """Stop the linger timer and fail any unresolved morsel futures so
+        blocked chain tasks unwind (error paths must not deadlock the
+        dispatcher's chain-pool shutdown)."""
+        self._stop.set()
+        if self._timer is not None:
+            self._timer.join(timeout=5.0)
+        with self._lock:
+            groups = list(self._groups)
+        for g in groups:
+            g.close(exc)
+
+
+# ---------------------------------------------------------------------------
 # Execution context
 # ---------------------------------------------------------------------------
 
@@ -652,7 +984,14 @@ class ExecutionContext:
     flagship). ``morsel_size=0`` disables pipelining (whole-table barrier
     between operators — the seed executor's behaviour). ``driver`` selects
     how backend calls run: ``"simulated"`` (inline + event-scheduler wall
-    model) or ``"threads"`` (per-tier worker pools, measured wall)."""
+    model) or ``"threads"`` (per-tier worker pools, measured wall).
+
+    ``coalesce`` (default on; only active with ``batch_size > 1``) routes
+    streamable LLM operators through a :class:`BatchCoalescer`, packing
+    rows from different morsels into full batches instead of paying
+    per-morsel ragged-remainder calls; ``linger_s`` bounds how long a
+    partial batch may wait for more rows before flushing (None = only the
+    morsel-boundary watermark flushes partials)."""
     backends: Dict[str, bk.Backend]
     default_tier: str = "m*"
     concurrency: int = 16
@@ -661,6 +1000,8 @@ class ExecutionContext:
     morsel_size: int = DEFAULT_MORSEL_ROWS
     mode: str = "async"
     driver: str = "simulated"
+    coalesce: bool = True
+    linger_s: Optional[float] = None
     cache: Optional[OutputCache] = None
     meter: bk.UsageMeter = dataclasses.field(default_factory=bk.UsageMeter)
 

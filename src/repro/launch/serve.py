@@ -18,6 +18,12 @@ measured vs simulated wall side by side (``--driver simulated`` runs the
 deterministic event-model path instead):
 
     PYTHONPATH=src python -m repro.launch.serve --semantic movie --slots 4
+
+With ``--batch N`` (batch prompting) the runtime's ``BatchCoalescer``
+packs batch slots across morsel boundaries; ``--linger S`` bounds how
+long a partial batch may wait for more rows (the analytics-level
+counterpart of the ContinuousBatcher's slot-fill policy), and
+``--no-coalesce`` restores per-morsel batching.
 """
 from __future__ import annotations
 
@@ -63,11 +69,15 @@ def serve_semantic(args):
     ctx = rt.ExecutionContext(backends=backends, default_tier="m1",
                               concurrency=args.slots,
                               morsel_size=args.slots * 4,
-                              driver=args.driver)
+                              driver=args.driver,
+                              batch_size=args.batch,
+                              coalesce=args.coalesce,
+                              linger_s=args.linger)
     q = WORKLOADS[args.semantic][0]
     print(f"[serve] semantic query {q.qid} over {table.name} "
           f"({table.n_rows} rows), m1 = {cfg.name} on {args.slots} slots, "
-          f"driver={args.driver}")
+          f"driver={args.driver} batch={args.batch} "
+          f"coalesce={args.coalesce} linger={args.linger}")
     t0 = time.time()
     res = ex.execute(q.plan_for(table), table, ctx)
     dt = time.time() - t0
@@ -108,6 +118,17 @@ def build_parser() -> argparse.ArgumentParser:
                     default="threads",
                     help="--semantic execution driver: real thread pools "
                          "(measured wall) or the event-model simulation")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="--semantic batch prompting size (records per "
+                         "LLM call)")
+    ap.add_argument("--coalesce", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="--semantic: pack batch slots across morsel "
+                         "boundaries (runtime.BatchCoalescer)")
+    ap.add_argument("--linger", type=float, default=None,
+                    help="--semantic: max seconds a partial coalesced "
+                         "batch waits for more rows before flushing "
+                         "(default: flush only on morsel watermarks)")
     return ap
 
 

@@ -1,0 +1,81 @@
+"""Shared fake backends for the test suite and benchmarks.
+
+One metering implementation (instead of per-file copies drifting apart):
+the driver-equivalence and coalescing suites assert exact call counts,
+batch groupings, and per-call latencies against these fakes, and
+``benchmarks/bench_coalesce.py`` uses the same class so its measured
+walls are comparable with the tests' acceptance bounds.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional, Sequence
+
+from repro.core import backends as bk
+from repro.core import plan as plan_ir
+from repro.core.cost import TierSpec
+
+
+class EchoOracle:
+    """Deterministic value-derived answers — lets tests assert outputs."""
+
+    def answer(self, op, value):
+        return f"A:{value}"
+
+    def answer_reduce(self, op, values):
+        return len(list(values))
+
+
+class ConstOracle:
+    """Always-true filter oracle (every row survives)."""
+
+    def answer(self, op, value):
+        return True
+
+    def answer_reduce(self, op, values):
+        return len(list(values))
+
+
+class SleepBackend:
+    """Always-correct fake backend whose calls *really* sleep.
+
+    Each (batched) call bills ``delay_s`` metered latency — exactly like
+    SimulatedBackend bills its modeled latency — and sleeps ``sleep_s``
+    real seconds (defaults to ``delay_s``; pass ``sleep_s=0.0`` for
+    event-time-only tests that want 1s modeled calls without 1s waits).
+    Counts calls and records each call's value group under a lock, so
+    tests can assert the exact batch grouping the runtime formed."""
+
+    def __init__(self, oracle, delay_s: float = 0.05, name: str = "m*",
+                 capability: float = 1.01,
+                 sleep_s: Optional[float] = None):
+        self.tier = TierSpec(name, capability, 0.0, 0.0, delay_s, 0.0)
+        self.oracle = oracle
+        self.delay_s = delay_s
+        self.sleep_s = delay_s if sleep_s is None else sleep_s
+        self.calls_made = 0
+        self.groups = []
+        self._lock = threading.Lock()
+
+    def run_values(self, op, values: Sequence, meter=None,
+                   batch_size: int = 1):
+        values = list(values)
+        if op.kind == plan_ir.REDUCE:
+            n_calls = 1
+            outs = [self.oracle.answer_reduce(op, values)]
+        else:
+            n_calls = max(1, -(-len(values) // batch_size))
+            outs = [self.oracle.answer(op, v) for v in values]
+        with self._lock:
+            self.calls_made += n_calls
+            self.groups.append(tuple(map(str, values)))
+        if self.sleep_s:
+            time.sleep(self.sleep_s * n_calls)
+        if meter is not None:
+            meter.record(self.tier.name,
+                         bk.Usage(calls=n_calls, tok_in=8.0 * len(values),
+                                  tok_out=4.0 * n_calls, usd=0.0,
+                                  latency_s=self.delay_s * n_calls),
+                         per_call_latency_s=[self.delay_s] * n_calls)
+        return outs

@@ -1,0 +1,425 @@
+"""Cross-morsel batch coalescing suite: result + meter identity against
+whole-table batching, the ceil(survivors/batch) call bound, event-time and
+wall-time linger flushes, reorder-buffer determinism, thread-safety under
+the threads driver, and the batch-aware cost model / optimizer pricing."""
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import backends as bk
+from repro.core import cost as cost_mod
+from repro.core import executor as ex
+from repro.core import physical_optimizer as popt
+from repro.core import plan as P
+from repro.core import runtime as rt
+from repro.core.table import Table
+from repro.data import load_dataset
+from repro.testing import EchoOracle, SleepBackend
+
+
+@pytest.fixture(scope="module")
+def movie_small():
+    return load_dataset("movie", max_rows=48)
+
+
+def _chain_plan():
+    return P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 8.", "IMDB_rating"),
+        P.Operator(P.MAP, "According to the movie plot, extract the "
+                   "genre(s) of each movie.", "Plot", "Genre"),
+        P.Operator(P.FILTER, "The movie is directed by Christopher "
+                   "Nolan.", "Director"),
+    ))
+
+
+def _assert_meters_equal(ma, mb):
+    assert set(ma.by_tier) == set(mb.by_tier)
+    for tier in ma.by_tier:
+        ua, ub = ma.by_tier[tier], mb.by_tier[tier]
+        assert ua.calls == ub.calls, tier
+        assert ua.tok_in == pytest.approx(ub.tok_in)
+        assert ua.tok_out == pytest.approx(ub.tok_out)
+        assert ua.usd == pytest.approx(ub.usd)
+        assert ua.latency_s == pytest.approx(ub.latency_s)
+
+
+# ---------------------------------------------------------------------------
+# Identity and call-count bounds
+# ---------------------------------------------------------------------------
+
+def test_coalesce_result_and_meter_identity_across_modes(movie_small):
+    """Coalesced morsel execution must reproduce whole-table (barrier)
+    batching exactly — results byte-identical, meters identical — while
+    per-morsel batching pays ragged-remainder extra calls."""
+    table, oracle = movie_small
+    plan = _chain_plan()
+    for batch in (4, 8):
+        runs, meters = {}, {}
+        for mode, kw in (("barrier", dict(morsel_size=0, coalesce=False)),
+                         ("morsel", dict(morsel_size=8, coalesce=False)),
+                         ("coalesced", dict(morsel_size=8, coalesce=True))):
+            meters[mode] = bk.UsageMeter()
+            runs[mode] = ex.execute(plan, table, bk.make_backends(oracle),
+                                    default_tier="m*", batch_size=batch,
+                                    meter=meters[mode], **kw)
+        for mode in ("morsel", "coalesced"):
+            assert runs[mode].table.columns[ex.ROWID] \
+                == runs["barrier"].table.columns[ex.ROWID]
+            assert runs[mode].table.columns["Genre"] \
+                == runs["barrier"].table.columns["Genre"]
+        _assert_meters_equal(meters["coalesced"], meters["barrier"])
+        assert meters["morsel"].total.calls > meters["coalesced"].total.calls
+        assert runs["coalesced"].coalesce_stats["rows"] > 0
+        assert runs["morsel"].coalesce_stats is None
+
+
+def test_coalesce_call_count_is_ceil_of_survivors(movie_small):
+    """Watermark-only flushing packs each operator into exactly
+    ceil(survivors/batch) calls — the whole-table bound, and the upper
+    bound ceil(survivors/batch) + n_partial_flushes holds by construction."""
+    table, oracle = movie_small
+    batch = 8
+    plan = _chain_plan()
+    meter = bk.UsageMeter()
+    res = ex.execute(plan, table, bk.make_backends(oracle),
+                     default_tier="m*", batch_size=batch, morsel_size=8,
+                     meter=meter, coalesce=True)
+    # replay the survivor counts through the same backends via barrier mode
+    sizes, cur = [], table
+    barrier = ex.execute(plan, cur, bk.make_backends(oracle),
+                         default_tier="m*", batch_size=batch, morsel_size=0,
+                         coalesce=False)
+    # per-op survivor cardinalities: full table -> after f1 -> after f1
+    # (map preserves) -> the exact calls are ceil(n_i/batch) summed
+    n0 = table.n_rows
+    n1 = len(barrier.table.columns[ex.ROWID])  # after the whole chain
+    # recompute intermediate survivor count with a 2-op prefix
+    prefix = ex.execute(P.LogicalPlan(plan.ops[:1]), table,
+                        bk.make_backends(oracle), default_tier="m*",
+                        batch_size=batch, morsel_size=0, coalesce=False)
+    s1 = prefix.table.n_rows
+    expect = -(-n0 // batch) + 2 * -(-s1 // batch)   # f1 + map + f2 inputs
+    assert meter.total.calls == expect
+    stats = res.coalesce_stats
+    assert meter.total.calls <= \
+        expect + stats["partial_flushes"]
+    assert stats["flushes"] == meter.total.calls
+    assert n1 <= s1
+
+
+def test_coalesce_reduction_meets_perf_target(movie_small):
+    """The ISSUE-3 acceptance bar: on the selective filter->map->filter
+    pipeline at batch_size=8, coalescing cuts LLM calls by >= 30% vs
+    per-morsel batching with identical results."""
+    table, oracle = movie_small
+    plan = _chain_plan()
+    calls = {}
+    for coalesce in (False, True):
+        meter = bk.UsageMeter()
+        res = ex.execute(plan, table, bk.make_backends(oracle),
+                         default_tier="m*", batch_size=8, morsel_size=8,
+                         meter=meter, coalesce=coalesce)
+        calls[coalesce] = (meter.total.calls,
+                           res.table.columns[ex.ROWID],
+                           res.table.columns["Genre"])
+    assert calls[True][1:] == calls[False][1:]       # identical answers
+    assert calls[True][0] <= 0.7 * calls[False][0]
+
+
+def test_coalesce_disabled_restores_per_morsel_batching(movie_small):
+    """The --coalesce knob: off = PR-2 per-morsel grouping, morsel-local
+    ceil call counts."""
+    table, oracle = movie_small
+    op = P.Operator(P.FILTER, "The rating is higher than 8.", "IMDB_rating")
+    plan = P.LogicalPlan((
+        op, P.Operator(P.MAP, "According to the movie plot, extract the "
+                       "genre(s) of each movie.", "Plot", "Genre")))
+    meter = bk.UsageMeter()
+    ex.execute(plan, table, bk.make_backends(oracle), default_tier="m*",
+               batch_size=4, morsel_size=8, meter=meter, coalesce=False)
+    # per-morsel: each 8-row filter morsel is 2 calls; map pays one ragged
+    # ceil per surviving morsel (survivors = what the imperfect backend
+    # actually passed, not the oracle truth)
+    fres = ex.execute(P.LogicalPlan((op,)), table, bk.make_backends(oracle),
+                      default_tier="m*", batch_size=4, morsel_size=0,
+                      coalesce=False)
+    kept = set(fres.table.columns[ex.ROWID])
+    mask = [i in kept for i in range(table.n_rows)]
+    morsel_survivors = [sum(mask[i:i + 8]) for i in range(0, len(mask), 8)]
+    expect = 2 * len(morsel_survivors) + sum(
+        -(-s // 4) for s in morsel_survivors if s)
+    assert meter.total.calls == expect
+
+
+def test_coalesce_empty_morsels_still_advance_watermark(movie_small):
+    """A filter that empties most morsels must not stall the accumulation
+    queue (empty submissions advance the watermark) and maps must still
+    define their output column."""
+    table, oracle = movie_small
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The movie is directed by Christopher "
+                   "Nolan.", "Director"),
+        P.Operator(P.MAP, "According to the movie plot, extract the "
+                   "genre(s) of each movie.", "Plot", "Genre"),
+    ))
+    for driver in rt.DRIVERS:
+        res = ex.execute(plan, table, bk.make_backends(oracle),
+                         default_tier="m*", batch_size=8, morsel_size=8,
+                         driver=driver, coalesce=True)
+        assert "Genre" in res.table.columns
+        want = ex.execute(plan, table, bk.make_backends(oracle),
+                          default_tier="m*", batch_size=8, morsel_size=0,
+                          coalesce=False)
+        assert res.table.columns[ex.ROWID] == want.table.columns[ex.ROWID]
+
+
+# ---------------------------------------------------------------------------
+# Determinism
+# ---------------------------------------------------------------------------
+
+def test_coalesce_simulated_runs_are_deterministic(movie_small):
+    """Acceptance: two simulated coalesced runs produce identical
+    UsageMeter.call_log (same calls, same order, same latencies)."""
+    table, oracle = movie_small
+    plan = _chain_plan()
+    logs = []
+    for _ in range(2):
+        meter = bk.UsageMeter()
+        res = ex.execute(plan, table, bk.make_backends(oracle),
+                         default_tier="m*", batch_size=8, morsel_size=8,
+                         meter=meter, coalesce=True, driver="simulated")
+        logs.append((list(meter.call_log), res.wall_s,
+                     res.table.columns[ex.ROWID]))
+    assert logs[0] == logs[1]
+
+
+def test_coalesce_reorder_buffer_forms_logical_order_batches():
+    """Morsels submitted in arbitrary thread order must form the same
+    logical-row-order batches whole-table batching would — the reorder
+    buffer admits submissions strictly by morsel index."""
+    backend = SleepBackend(EchoOracle(), delay_s=1.0, sleep_s=0.0)
+    meter = bk.UsageMeter()
+    disp = rt.ThreadPoolDispatcher(concurrency=8)
+    coal = rt.BatchCoalescer(disp, meter, batch_size=4)
+    op = P.Operator(P.MAP, "annotate", "v", "a")
+    n_morsels, rows = 12, 3
+    group = coal.open(op, backend, "m*", expected=n_morsels)
+    order = list(range(n_morsels))
+    random.Random(7).shuffle(order)
+    futs = {}
+    threads = []
+
+    def submit(idx):
+        futs[idx] = group.submit(
+            idx, [f"m{idx}r{j}" for j in range(rows)], 0.0)
+
+    for idx in order:
+        t = threading.Thread(target=submit, args=(idx,))
+        threads.append(t)
+        t.start()
+        time.sleep(0.002)
+    for t in threads:
+        t.join()
+    flat = [f"m{i}r{j}" for i in range(n_morsels) for j in range(rows)]
+    want_groups = [tuple(flat[i:i + 4]) for i in range(0, len(flat), 4)]
+    assert backend.groups == want_groups          # logical order, in order
+    for idx in range(n_morsels):
+        outs, _ = futs[idx].result(timeout=5)
+        assert outs == [f"A:m{idx}r{j}" for j in range(rows)]
+    coal.close()
+    disp.close()
+
+
+# ---------------------------------------------------------------------------
+# Linger flushes
+# ---------------------------------------------------------------------------
+
+def test_coalesce_linger_flush_fires_under_event_scheduler():
+    """Simulated driver, event-time linger: a partial batch whose next
+    contributor arrives after the linger deadline flushes at the deadline
+    (one extra call, earlier downstream start) instead of waiting."""
+    op = P.Operator(P.MAP, "annotate", "v", "a")
+
+    def run(linger):
+        backend = SleepBackend(EchoOracle(), delay_s=1.0, sleep_s=0.0)
+        meter = bk.UsageMeter()
+        disp = rt.SimulatedDispatcher(rt.EventScheduler(concurrency=4))
+        coal = rt.BatchCoalescer(disp, meter, batch_size=8, linger_s=linger)
+        group = coal.open(op, backend, "m*", expected=2)
+        f0 = group.submit(0, ["a", "b", "c"], 0.0)
+        f1 = group.submit(1, ["d", "e"], 10.0)     # arrives at t=10
+        coal.close()
+        return (meter.total.calls, f0.result()[1], f1.result()[1],
+                dict(coal.stats))
+
+    calls, fin0, fin1, stats = run(linger=2.0)
+    assert calls == 2                    # linger partial + watermark partial
+    assert fin0 == pytest.approx(3.0)    # launched at 0 + linger 2, 1s call
+    assert fin1 == pytest.approx(11.0)
+    assert stats["partial_flushes"] == 2
+
+    calls, fin0, fin1, stats = run(linger=None)
+    assert calls == 1                    # one watermark batch at t=10
+    assert fin0 == fin1 == pytest.approx(11.0)
+    assert stats["partial_flushes"] == 1
+
+
+def test_coalesce_linger_deadline_does_not_slide():
+    """The linger deadline anchors to the *oldest* queued row: arrivals
+    each within linger of the previous one must not extend the wait
+    indefinitely (the t=0 rows flush at t=linger, not at the watermark)."""
+    op = P.Operator(P.MAP, "annotate", "v", "a")
+    backend = SleepBackend(EchoOracle(), delay_s=1.0, sleep_s=0.0)
+    meter = bk.UsageMeter()
+    disp = rt.SimulatedDispatcher(rt.EventScheduler(concurrency=4))
+    coal = rt.BatchCoalescer(disp, meter, batch_size=8, linger_s=2.0)
+    group = coal.open(op, backend, "m*", expected=4)
+    futs = [group.submit(0, ["a"], 0.0),
+            group.submit(1, ["b"], 1.5),    # within linger of row "a"...
+            group.submit(2, ["c"], 3.0),    # ...but past a+linger=2.0
+            group.submit(3, ["d"], 4.5)]
+    coal.close()
+    # [a, b] flush at the t=0 row's deadline 2.0 (not at 4.5's watermark);
+    # [c, d] flush at the watermark, launched at their max ready 4.5
+    assert meter.total.calls == 2
+    assert futs[0].result()[1] == pytest.approx(3.0)   # 2.0 + 1s call
+    assert futs[1].result()[1] == pytest.approx(3.0)
+    assert futs[2].result()[1] == pytest.approx(5.5)
+    assert futs[3].result()[1] == pytest.approx(5.5)
+
+
+def test_coalesce_linger_timer_flushes_under_threads_driver():
+    """Threads driver, wall-time linger: a partial batch flushes after
+    linger_s even though the watermark contributor never arrives yet."""
+    backend = SleepBackend(EchoOracle(), delay_s=0.0)
+    meter = bk.UsageMeter()
+    disp = rt.ThreadPoolDispatcher(concurrency=4)
+    coal = rt.BatchCoalescer(disp, meter, batch_size=8, linger_s=0.05)
+    op = P.Operator(P.MAP, "annotate", "v", "a")
+    group = coal.open(op, backend, "m*", expected=2)
+    fut = group.submit(0, ["a", "b"], 0.0)
+    outs, _ = fut.result(timeout=5)      # resolved by the linger timer
+    assert outs == ["A:a", "A:b"]
+    assert meter.total.calls == 1
+    group.submit(1, ["c"], 0.0).result(timeout=5)
+    assert meter.total.calls == 2
+    coal.close()
+    disp.close()
+
+
+# ---------------------------------------------------------------------------
+# Threads driver: safety + equivalence
+# ---------------------------------------------------------------------------
+
+def test_coalesce_threads_matches_simulated_many_morsels():
+    """Thread-safety under load: 24 morsels racing through a coalesced
+    two-op chain give byte-identical results and accounting on both
+    drivers (and the run terminates — no deadlock)."""
+    oracle = EchoOracle()
+    table = Table({"v": [f"x{i}" for i in range(96)]}, name="wide")
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "keep", "v"),
+        P.Operator(P.MAP, "annotate", "v", "a"),
+    ))
+
+    class KeepOracle(EchoOracle):
+        def answer(self, op, value):
+            if op.kind == P.FILTER:
+                return int(str(value)[1:]) % 3 != 0    # selective-ish
+            return f"A:{value}"
+
+    stats = {}
+    for d in rt.DRIVERS:
+        backend = SleepBackend(KeepOracle(), delay_s=1.0, sleep_s=0.002)
+        meter = bk.UsageMeter()
+        res = ex.execute(plan, table, {"m*": backend}, default_tier="m*",
+                         batch_size=8, morsel_size=4, meter=meter,
+                         driver=d, coalesce=True)
+        stats[d] = (meter.total.calls, res.table.columns["a"],
+                    res.table.columns[ex.ROWID])
+    assert stats["threads"] == stats["simulated"]
+
+
+def test_coalesce_backend_failure_raises_instead_of_hanging():
+    """A backend failure in one morsel's batch must propagate as an
+    exception, not deadlock: failed chains poison downstream steps, which
+    still advance their accumulation queues' watermarks (empty
+    submissions) so every other morsel's future resolves."""
+    class BoomOracle(EchoOracle):
+        def answer(self, op, value):
+            if "BOOM" in str(value):
+                raise RuntimeError("backend down")
+            return True if op.kind == P.FILTER else f"A:{value}"
+
+    table = Table({"v": [f"x{i}" if i < 8 else f"BOOM{i}"
+                         for i in range(16)]}, name="boom")
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "keep", "v"),
+        P.Operator(P.MAP, "annotate", "v", "a"),
+    ))
+    for d in rt.DRIVERS:
+        backend = SleepBackend(BoomOracle(), delay_s=0.0)
+        t0 = time.perf_counter()
+        with pytest.raises(RuntimeError, match="backend down"):
+            ex.execute(plan, table, {"m*": backend}, default_tier="m*",
+                       batch_size=8, morsel_size=8, driver=d,
+                       coalesce=True)
+        assert time.perf_counter() - t0 < 30.0       # raised, not hung
+
+
+def test_coalesce_threads_wall_does_not_regress(movie_small):
+    """Acceptance: measured threads wall with coalescing stays at or below
+    per-morsel batching on the bench pipeline (fewer, fuller calls)."""
+    table, oracle = movie_small
+    plan = _chain_plan()
+    walls = {}
+    for coalesce in (False, True):
+        best = float("inf")
+        for _ in range(3):
+            backend = SleepBackend(oracle, delay_s=0.03)
+            res = ex.execute(plan, table, {"m*": backend},
+                             default_tier="m*", batch_size=8, morsel_size=8,
+                             concurrency=8, driver="threads",
+                             coalesce=coalesce)
+            best = min(best, res.wall_s)
+        walls[coalesce] = best
+    assert walls[True] <= walls[False] * 1.10 + 0.02
+
+
+# ---------------------------------------------------------------------------
+# Batch-aware cost model + optimizer pricing
+# ---------------------------------------------------------------------------
+
+def test_coalesce_cost_model_prices_ceil_batches():
+    op = P.Operator(P.FILTER, "keep the good ones", "v")
+    tier = cost_mod.DEFAULT_TIERS["m1"]
+    c1 = cost_mod.op_cost(op, 100, tier, batch_size=1)
+    c8 = cost_mod.op_cost(op, 100, tier, batch_size=8)
+    assert c1.llm_calls == 100
+    assert c8.llm_calls == 13                       # ceil(100/8)
+    assert c8.usd < c1.usd                          # shared instruction
+    assert c8.tok_in == pytest.approx(
+        13 * cost_mod.text_tokens(op.instruction) + 100 * 60.0)
+    plan = P.LogicalPlan((op,))
+    p1 = cost_mod.plan_cost(plan, 100, batch_size=1)
+    p8 = cost_mod.plan_cost(plan, 100, batch_size=8)
+    assert p8.llm_calls == 13 and p1.llm_calls == 100
+    assert p8.usd < p1.usd
+
+
+def test_coalesce_physical_optimizer_scoring_is_batch_priced(movie_small):
+    """With ctx.batch_size > 1 the physical optimizer's scoring sweeps run
+    batched: ceil(sample/batch) calls per tier sweep — strictly fewer
+    optimizer-phase calls than per-record scoring, tier choices intact."""
+    table, oracle = movie_small
+    plan = P.LogicalPlan(_chain_plan().ops[:2])
+    meters = {}
+    for batch in (1, 8):
+        ctx = rt.ExecutionContext(backends=bk.make_backends(oracle),
+                                  default_tier="m*", batch_size=batch)
+        pres = popt.optimize(plan, table, ctx)
+        meters[batch] = pres.meter.total.calls
+        assert set(pres.assignments) == {0, 1}
+    assert meters[8] < meters[1]

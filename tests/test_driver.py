@@ -20,6 +20,7 @@ from repro.core import plan as P
 from repro.core import runtime as rt
 from repro.core.table import Table
 from repro.data import load_dataset
+from repro.testing import ConstOracle, EchoOracle, SleepBackend
 
 from conftest import perfect_backends
 
@@ -27,47 +28,6 @@ from conftest import perfect_backends
 @pytest.fixture(scope="module")
 def movie_small():
     return load_dataset("movie", max_rows=48)
-
-
-class SleepBackend:
-    """Always-correct backend whose calls *really* sleep — bills one
-    ``delay_s`` latency per (batched) call, exactly like SimulatedBackend
-    bills its modeled latency, and counts calls under a lock."""
-
-    def __init__(self, oracle, delay_s=0.05, name="m*", capability=1.01):
-        self.tier = cost_mod.TierSpec(name, capability, 0.0, 0.0,
-                                      delay_s, 0.0)
-        self.oracle = oracle
-        self.delay_s = delay_s
-        self.calls_made = 0
-        self._lock = threading.Lock()
-
-    def run_values(self, op, values, meter=None, batch_size=1):
-        values = list(values)
-        if op.kind == P.REDUCE:
-            n_calls = 1
-            outs = [self.oracle.answer_reduce(op, values)]
-        else:
-            n_calls = max(1, -(-len(values) // batch_size))
-            outs = [self.oracle.answer(op, v) for v in values]
-        with self._lock:
-            self.calls_made += n_calls
-        time.sleep(self.delay_s * n_calls)
-        if meter is not None:
-            meter.record(self.tier.name,
-                         bk.Usage(calls=n_calls, tok_in=8.0 * len(values),
-                                  tok_out=4.0 * n_calls, usd=0.0,
-                                  latency_s=self.delay_s * n_calls),
-                         per_call_latency_s=[self.delay_s] * n_calls)
-        return outs
-
-
-class ConstOracle:
-    def answer(self, op, value):
-        return True
-
-    def answer_reduce(self, op, values):
-        return len(list(values))
 
 
 def _chain_plan():
@@ -211,6 +171,35 @@ def test_driver_cache_single_flight_under_concurrent_morsels():
     assert calls_made == misses == metered == 8      # one bill per unique v
     assert hits == 24
     assert n_rows == 32
+
+
+def test_driver_coalesced_duplicate_grouping_is_identical():
+    """The PR-2 documented corner, now closed: batch_size > 1 + shared
+    cache + duplicate values split across morsels must produce *identical
+    call grouping* (and therefore identical UsageMeter totals) under the
+    simulated and threads drivers — the BatchCoalescer dedupes before
+    batch formation and forms batches in logical row order."""
+    oracle = EchoOracle()
+    table = Table({"v": [str(i % 8) for i in range(32)]}, name="dups")
+    plan = P.LogicalPlan((P.Operator(P.MAP, "annotate", "v", "a"),))
+    stats = {}
+    for d in rt.DRIVERS:
+        backend = SleepBackend(oracle, delay_s=0.003)
+        cache = rt.OutputCache()
+        meter = bk.UsageMeter()
+        res = ex.execute(plan, table, {"m*": backend}, default_tier="m*",
+                         batch_size=4, morsel_size=8, cache=cache,
+                         meter=meter, driver=d)
+        stats[d] = (sorted(backend.groups), backend.calls_made,
+                    cache.misses, cache.hits, meter.total.calls,
+                    meter.total.latency_s, res.table.columns["a"])
+    assert stats["threads"] == stats["simulated"]
+    groups, calls, misses, hits, metered, _, outs = stats["simulated"]
+    # 8 unique values dedupe into exactly two full batches of 4
+    assert calls == metered == 2
+    assert groups == [("0", "1", "2", "3"), ("4", "5", "6", "7")]
+    assert misses == 8 and hits == 24
+    assert outs == [f"A:{i % 8}" for i in range(32)]
 
 
 def test_driver_equivalence_judge_and_optimizers(movie_small):
