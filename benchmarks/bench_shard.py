@@ -1,0 +1,143 @@
+"""Morsel-parallel sharding benchmark — the repo's shard-scaling
+perf trajectory.
+
+A selective filter -> map -> filter pipeline runs at
+``shards in {1, 2, 4}`` x ``batch_size in {1, 8}``:
+
+* simulated driver: LLM calls, usd, and event-model wall per config, with
+  byte-identical results checked across every shard count (the
+  shard-count-invariance contract: sharding changes *where* morsels run,
+  never what they answer or bill);
+* threads driver: *measured* wall over a really-sleeping backend
+  (``repro.testing.SleepBackend``) at 1 vs 4 shards — each shard worker
+  is its own replica (``concurrency`` workers per (shard, tier) pool), so
+  4 shards must deliver a >= 1.5x measured speedup with byte-identical
+  results.
+
+Writes ``artifacts/bench/BENCH_shard.json`` (one row per config) and a
+repo-root ``BENCH_shard.json`` summary for the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core import backends as bk
+from repro.core import executor as ex
+from repro.core import plan as plan_ir
+from repro.data import load_dataset
+from repro.testing import SleepBackend
+
+from benchmarks import common
+
+MORSEL = 8
+SHARD_COUNTS = (1, 2, 4)
+ROOT_SUMMARY = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_shard.json")
+
+
+def _pipeline():
+    return plan_ir.LogicalPlan((
+        plan_ir.Operator(plan_ir.FILTER, "The rating is higher than 8.",
+                         "IMDB_rating"),
+        plan_ir.Operator(plan_ir.MAP, "According to the movie plot, "
+                         "extract the genre(s) of each movie.", "Plot",
+                         "Genre"),
+        plan_ir.Operator(plan_ir.FILTER, "The movie is directed by "
+                         "Christopher Nolan.", "Director"),
+    ))
+
+
+def _result_key(res):
+    t = res.table
+    return (tuple(t.columns[ex.ROWID]), tuple(map(str, t.columns["Genre"])))
+
+
+def run(max_rows: int = 96, sleep_s: float = 0.02):
+    table, oracle = load_dataset("movie", max_rows=max_rows)
+    plan = _pipeline()
+    rows = []
+
+    # -- simulated driver: deterministic calls/usd/wall sweep -------------
+    results = {}
+    for batch in (1, 8):
+        for shards in SHARD_COUNTS:
+            meter = bk.UsageMeter()
+            res = ex.execute(plan, table, bk.make_backends(oracle),
+                             default_tier="m*", batch_size=batch,
+                             morsel_size=MORSEL, meter=meter,
+                             shards=shards, driver="simulated")
+            results[(batch, shards)] = _result_key(res)
+            rows.append({
+                "driver": "simulated", "batch": batch, "shards": shards,
+                "calls": meter.total.calls,
+                "usd": round(meter.total.usd, 6),
+                "wall_s": round(res.wall_s, 4)})
+        for shards in SHARD_COUNTS[1:]:
+            if results[(batch, shards)] != results[(batch, 1)]:
+                raise AssertionError(
+                    f"sharding changed the answer at batch={batch} "
+                    f"shards={shards}")
+        calls = {r["shards"]: r["calls"] for r in rows
+                 if r["driver"] == "simulated" and r["batch"] == batch}
+        if len(set(calls.values())) != 1:
+            raise AssertionError(
+                f"sharding changed call counts at batch={batch}: {calls}")
+
+    # -- threads driver: measured wall over a really-sleeping backend -----
+    threads_results = {}
+    for shards in (1, 4):
+        walls, meter, res = [], None, None
+        for _ in range(3):          # median of 3: thread scheduling jitter
+            backend = SleepBackend(oracle, delay_s=sleep_s)
+            meter = bk.UsageMeter()
+            res = ex.execute(plan, table, {"m*": backend},
+                             default_tier="m*", batch_size=1,
+                             morsel_size=MORSEL, meter=meter,
+                             concurrency=4, shards=shards,
+                             driver="threads")
+            walls.append(res.wall_s)
+        threads_results[shards] = _result_key(res)
+        rows.append({
+            "driver": "threads", "batch": 1, "shards": shards,
+            "calls": meter.total.calls, "usd": round(meter.total.usd, 6),
+            "wall_s": round(sorted(walls)[1], 4),
+            "walls": [round(w, 4) for w in walls]})
+    if threads_results[4] != threads_results[1]:
+        raise AssertionError("threads sharding changed the answer")
+
+    def row_of(driver, batch, shards):
+        return next(r for r in rows if r["driver"] == driver
+                    and r["batch"] == batch and r["shards"] == shards)
+
+    t1 = row_of("threads", 1, 1)
+    t4 = row_of("threads", 1, 4)
+    speedup = t1["wall_s"] / max(t4["wall_s"], 1e-9)
+    summary = {
+        "driver": "summary", "batch": 1, "shards": 4,
+        "calls": t4["calls"],
+        "threads_wall_1shard_s": t1["wall_s"],
+        "threads_wall_4shard_s": t4["wall_s"],
+        "threads_speedup_4x_vs_1x": round(speedup, 3),
+        "simulated_calls_batch1": row_of("simulated", 1, 1)["calls"],
+        "simulated_calls_batch8": row_of("simulated", 8, 1)["calls"],
+        "results_identical_across_shards": True,
+    }
+    rows.append(summary)
+    common.emit("BENCH_shard", rows)
+    with open(ROOT_SUMMARY, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(common.fmt_table(
+        [r for r in rows if r["driver"] != "summary"],
+        ["driver", "batch", "shards", "calls", "usd", "wall_s"]))
+    print(f"[bench_shard] threads wall {t1['wall_s']:.3f}s (1 shard) -> "
+          f"{t4['wall_s']:.3f}s (4 shards): {speedup:.2f}x speedup, "
+          f"byte-identical results")
+    if speedup < 1.5:
+        raise AssertionError(
+            f"4-shard threads speedup {speedup:.2f}x < 1.5x target")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

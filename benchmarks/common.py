@@ -56,6 +56,11 @@ DRIVER = "simulated"
 # process-wide to measure the per-morsel ragged-batch baseline.
 COALESCE = True
 
+# morsel-parallel shard workers for every system analog (1 = unsharded;
+# results/calls/meters are shard-count invariant, wall is not).
+# ``benchmarks.run --shards`` overrides it process-wide.
+SHARDS = 1
+
 
 def set_driver(name: str) -> None:
     global DRIVER
@@ -69,6 +74,11 @@ def set_coalesce(flag: bool) -> None:
     COALESCE = bool(flag)
 
 
+def set_shards(n: int) -> None:
+    global SHARDS
+    SHARDS = max(1, int(n))
+
+
 def add_driver_arg(ap) -> None:
     import argparse
     ap.add_argument("--driver", choices=rt.DRIVERS, default=None,
@@ -78,6 +88,9 @@ def add_driver_arg(ap) -> None:
                     default=None,
                     help="cross-morsel batch coalescing for batched runs "
                          "(default: on)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="morsel-parallel shard workers for all system "
+                         "analogs (default: 1)")
 
 
 def env(dataset: str, max_rows: int = 0, violation_rate: float = 0.03,
@@ -148,7 +161,8 @@ def run_nirvana(q, table, backends, perfect, *, logical=True, physical=True,
                               driver=driver or DRIVER,
                               coalesce=COALESCE if coalesce is None
                               else coalesce,
-                              linger_s=linger)
+                              linger_s=linger,
+                              shards=SHARDS)
     opt_wall = opt_usd = 0.0
     lres = pres = None
     if logical:
@@ -200,7 +214,8 @@ def run_palimpzest_analog(q, table, backends, perfect) -> RunResult:
         plan = oc.plan
     run = ex.execute(plan, table,
                      rt.ExecutionContext(backends=backends,
-                                         default_tier="m*", driver=DRIVER))
+                                         default_tier="m*", driver=DRIVER,
+                                         shards=SHARDS))
     return RunResult("palimpzest", table.name, q.qid, q.size,
                      run.wall_s, run.meter.total.usd,
                      answer_correct(run.value(), truth),
@@ -214,7 +229,7 @@ def run_lotus_analog(q, table, backends, perfect) -> RunResult:
     plan = q.plan_for(table)
     truth = truth_of(plan, table, perfect)
     ctx = rt.ExecutionContext(backends=backends, default_tier="m*",
-                              driver=DRIVER)
+                              driver=DRIVER, shards=SHARDS)
     pres = popt.optimize(plan, table, ctx,
                          cfg=popt.PhysicalOptConfig(estimator="exact"))
     run = ex.execute(pres.plan, table, ctx)
@@ -237,7 +252,8 @@ def run_tablerag_analog(q, table, backends, perfect, k: int = 50
     sub = table.head(k)
     run = ex.execute(plan, sub,
                      rt.ExecutionContext(backends=backends,
-                                         default_tier="m1", driver=DRIVER))
+                                         default_tier="m1", driver=DRIVER,
+                                         shards=SHARDS))
     got = run.value()
     correct = answer_correct(got, truth)
     return RunResult("tablerag", table.name, q.qid, q.size,

@@ -13,7 +13,7 @@ import time
 import traceback
 
 from benchmarks import common
-from benchmarks import (appendix_d_search, bench_coalesce,
+from benchmarks import (appendix_d_search, bench_coalesce, bench_shard,
                         fig9_fig10_breakdown,
                         fig13_cardinality, fig14_batch_prompting,
                         roofline_report, table2_capability,
@@ -23,6 +23,8 @@ from benchmarks import (appendix_d_search, bench_coalesce,
 
 BENCHES = [
     ("bench_coalesce", lambda q: bench_coalesce.run(
+        max_rows=48 if q else 96)),
+    ("bench_shard", lambda q: bench_shard.run(
         max_rows=48 if q else 96)),
     ("table2_capability", lambda q: table2_capability.run(
         n=200 if q else 500)),
@@ -59,6 +61,8 @@ def main(argv=None):
         common.set_driver(args.driver)
     if args.coalesce is not None:
         common.set_coalesce(args.coalesce)
+    if args.shards is not None:
+        common.set_shards(args.shards)
 
     summary = []
     n_fail = 0

@@ -23,6 +23,7 @@ accounting (Tables 6 & 9) includes *everything the optimizer spends*.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import hashlib
 import threading
@@ -66,22 +67,88 @@ class UsageMeter:
 
     ``record`` is lock-protected: under the threaded execution driver
     (``runtime.ThreadPoolDispatcher``) concurrent backend calls bill into
-    one shared meter, and totals must match the sequential driver's."""
+    one shared meter, and totals must match the sequential driver's.
+
+    Calls can carry an optional **logical key** — a tuple like
+    ``(op_index, morsel_index, chunk, call)`` identifying the call's place
+    in the plan rather than its arrival time. Keys are attached either
+    explicitly (``record(..., key=...)``) or ambiently via the
+    :meth:`keyed` context manager, which the runtime wraps around backend
+    invocations (the ambient form survives the hop onto a tier-pool
+    thread because the runtime re-enters it inside the pool thunk).
+    ``call_keys`` parallels ``call_log``; :meth:`merge` uses the keys to
+    combine per-shard meters into one log with *deterministic* ordering —
+    sorted by logical key, not by which shard's thread billed first."""
 
     def __init__(self):
         self.by_tier: Dict[str, Usage] = {}
         self.call_log: List[tuple] = []      # (tier_name, latency_s)
+        self.call_keys: List[Optional[tuple]] = []   # parallel logical keys
         self._lock = threading.Lock()
+        self._local = threading.local()
+
+    @contextlib.contextmanager
+    def keyed(self, key: Optional[tuple]):
+        """Attach ``key`` to every call recorded in this thread inside the
+        ``with`` block (per-call index appended per entry)."""
+        prev = getattr(self._local, "key", None)
+        self._local.key = key
+        try:
+            yield self
+        finally:
+            self._local.key = prev
 
     def record(self, tier_name: str, usage: Usage,
-               per_call_latency_s: Optional[Sequence[float]] = None):
+               per_call_latency_s: Optional[Sequence[float]] = None,
+               key: Optional[tuple] = None):
+        if key is None:
+            key = getattr(self._local, "key", None)
         if per_call_latency_s is None and usage.calls > 0:
             per_call_latency_s = [usage.latency_s / usage.calls] \
                 * usage.calls
         with self._lock:
             self.by_tier.setdefault(tier_name, Usage()).add(usage)
-            for lat in per_call_latency_s or ():
+            for i, lat in enumerate(per_call_latency_s or ()):
                 self.call_log.append((tier_name, lat))
+                self.call_keys.append(None if key is None
+                                      else tuple(key) + (i,))
+
+    def absorb(self, other: "UsageMeter") -> "UsageMeter":
+        """Add another meter's totals and call log into this one (shard
+        merge target; also the judge's two-run accounting)."""
+        with other._lock:
+            tiers = {t: dataclasses.replace(u)
+                     for t, u in other.by_tier.items()}
+            log, keys = list(other.call_log), list(other.call_keys)
+        with self._lock:
+            for t, u in tiers.items():
+                self.by_tier.setdefault(t, Usage()).add(u)
+            self.call_log.extend(log)
+            self.call_keys.extend(keys)
+        return self
+
+    @staticmethod
+    def merge(meters: Sequence["UsageMeter"]) -> "UsageMeter":
+        """Combine meters (e.g. one per shard) into a new meter whose
+        ``call_log`` ordering is **deterministic**: entries sort by their
+        logical (morsel, call) key, not by arrival time — so two threaded
+        sharded runs that made the same calls report identical logs.
+        Un-keyed entries keep (meter position) order after the keyed ones."""
+        out = UsageMeter()
+        entries = []
+        for mi, m in enumerate(meters):
+            with m._lock:
+                for tier, u in m.by_tier.items():
+                    out.by_tier.setdefault(tier, Usage()).add(u)
+                for pos, entry in enumerate(m.call_log):
+                    k = m.call_keys[pos] if pos < len(m.call_keys) else None
+                    sort_key = (0, k) if k is not None else (1, (mi, pos))
+                    entries.append((sort_key, entry, k))
+        entries.sort(key=lambda e: e[0])
+        for _, entry, k in entries:
+            out.call_log.append(entry)
+            out.call_keys.append(k)
+        return out
 
     @property
     def total(self) -> Usage:

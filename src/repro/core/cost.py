@@ -158,11 +158,18 @@ def plan_cost(plan: plan_ir.LogicalPlan, n_rows: int,
               tiers: Optional[Dict[str, TierSpec]] = None,
               default_tier: str = "m*",
               avg_value_tokens: float = 60.0,
-              concurrency: int = 16, batch_size: int = 1) -> PlanCost:
-    """Estimate a full plan: record counts flow through selectivities."""
+              concurrency: int = 16, batch_size: int = 1,
+              shards: int = 1) -> PlanCost:
+    """Estimate a full plan: record counts flow through selectivities.
+
+    ``concurrency`` is one shard worker's replica width; ``shards``
+    multiplies it (morsel-parallel sharded execution runs a
+    pool-per-(shard, tier), so un-quota'd effective width is
+    ``concurrency * shards`` — matching ``ShardedDispatcher``)."""
     tiers = tiers or DEFAULT_TIERS
     rows = float(n_rows)
     total = PlanCost(per_op=[])
+    width = max(1, int(concurrency)) * max(1, int(shards))
     for op in plan.ops:
         tier = tiers[op.tier or default_tier]
         c = op_cost(op, rows, tier, avg_value_tokens,
@@ -172,8 +179,8 @@ def plan_cost(plan: plan_ir.LogicalPlan, n_rows: int,
         total.tok_in += c.tok_in
         total.tok_out += c.tok_out
         total.usd += c.usd
-        # ops execute in sequence; each op's calls run `concurrency`-wide
-        total.latency_s += c.latency_s / max(1, concurrency)
+        # ops execute in sequence; each op's calls run `width`-wide
+        total.latency_s += c.latency_s / width
         total.rows_processed += c.rows_in if op.is_llm else 0.0
         rows = c.rows_out
     return total

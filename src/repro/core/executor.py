@@ -30,12 +30,19 @@ still start early, but batch slots fill across morsel boundaries
 (``ceil(survivors/batch)`` calls, like whole-table batching, instead of
 ``sum(ceil(s_i/batch))`` per-morsel ceilings).
 
+With ``ctx.shards > 1`` the morsel stream fans out round-robin across
+shard workers (``distributed.morsel_shards.ShardedDispatcher``): each
+morsel's chain runs on its shard's pools, coalesced batch *formation*
+stays global, and shard outputs merge back in logical morsel order
+(``Table.concat`` via ``_merge``); per-shard staging meters combine into
+``ctx.meter`` with a deterministic call log (``disp.finalize``).
+
 Monetary cost comes from tier token prices; both axes accumulate in a
 UsageMeter so benchmarks can break costs down per model tier (paper
-Fig. 10). Neither morsel pipelining, coalescing, nor the driver changes
-the answer — results, call counts, and per-tier meter totals are
-identical across barrier/morsel/coalesced and simulated/threaded
-execution.
+Fig. 10). Neither morsel pipelining, coalescing, the driver, nor the
+shard count changes the answer — results, call counts, and per-tier
+meter totals are identical across barrier/morsel/coalesced,
+simulated/threaded, and shards in {1, 2, 4} execution.
 """
 from __future__ import annotations
 
@@ -155,6 +162,8 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
             driver: Optional[str] = None,
             coalesce: Optional[bool] = None,
             linger_s: Optional[float] = None,
+            shards: Optional[int] = None,
+            shard_cache: Optional[str] = None,
             scheduler: Optional[rt.EventScheduler] = None,
             dispatcher: Optional[rt.Dispatcher] = None
             ) -> ExecutionResult:
@@ -178,7 +187,9 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
                               ("morsel_size", morsel_size),
                               ("driver", driver),
                               ("coalesce", coalesce),
-                              ("linger_s", linger_s))
+                              ("linger_s", linger_s),
+                              ("shards", shards),
+                              ("shard_cache", shard_cache))
             if v is not None}
     ctx = rt.as_context(backends, **over)
 
@@ -197,6 +208,10 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
          disp: rt.Dispatcher, t0: float) -> ExecutionResult:
     meter = ctx.meter
     table = with_rowids(table)
+    # Morsel boundaries do NOT depend on the shard count: a sharded
+    # dispatcher only changes *where* each morsel runs (round-robin by
+    # morsel index), so results and per-morsel call grouping are
+    # shard-count invariant by construction.
     parts = [disp.done(t) for t, _ in
              _split_morsels(table, ctx.morsel_size, ctx.batch_size)]
     scalar = None
@@ -210,19 +225,21 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
         coal = rt.BatchCoalescer(disp, meter, batch_size=ctx.batch_size,
                                  cache=ctx.cache, linger_s=ctx.linger_s)
 
-    def llm_calls(op, values, ready):
-        """Dispatch one operator over one morsel's values."""
+    def llm_calls(op, oi, idx, values, ready):
+        """Dispatch one operator over one morsel's values on the morsel's
+        shard; (op index, morsel index) is the call's logical meter key."""
         backend = ctx.backend(op.tier)
         # account under the backend's own tier name (a dict key like "m*"
         # may map to a differently-named backend, e.g. a JAXBackend tier)
         outs, finish = disp.run_llm(op, values, backend, backend.tier.name,
                                     meter, batch_size=ctx.batch_size,
-                                    cache=ctx.cache, ready_s=ready)
+                                    cache=ctx.cache, ready_s=ready,
+                                    shard=disp.shard_of(idx), key=(oi, idx))
         with rows_lock:
             rows_processed[0] += len(values)
         return outs, finish
 
-    def step(op, group, idx, value, ready):
+    def step(op, oi, group, idx, value, ready):
         """Advance one morsel through one streamable (filter/map) operator;
         runs on a chain-pool thread under the threaded driver. ``value``
         may be a _PendingMorsel from an upstream coalesced operator, or a
@@ -252,12 +269,12 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
             values = tbl.resolve(op.input_column)
             if op.udf is not None:
                 # host UDF morsels pipeline against LLM work but serialize
-                # against each other (one Python process)
+                # against each other (one Python process, even sharded)
                 (out_tbl, _), finish = disp.run_host(
                     lambda: rt.run_udf_op(op, tbl, values), tbl.n_rows,
-                    ready_s=ready)
+                    ready_s=ready, shard=disp.shard_of(idx))
                 return out_tbl, finish
-            outs, finish = llm_calls(op, values, ready)
+            outs, finish = llm_calls(op, oi, idx, values, ready)
             out_tbl, _ = rt.apply_outputs(op, tbl, outs)
             return out_tbl, finish
         except BaseException as e:
@@ -268,7 +285,7 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
             return _FailedMorsel(e), ready
 
     try:
-        for op in plan.ops:
+        for oi, op in enumerate(plan.ops):
             if op.kind in (plan_ir.REDUCE, plan_ir.RANK):
                 # pipeline barrier: needs every surviving row
                 tbl, ready = _merge([_force(*p.result()) for p in parts])
@@ -282,7 +299,7 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                         lambda t=tbl, v=values: rt.run_udf_op(op, t, v),
                         tbl.n_rows, ready_s=ready)
                 else:
-                    outs, finish = llm_calls(op, values, ready)
+                    outs, finish = llm_calls(op, oi, 0, values, ready)
                     tbl, out = rt.apply_outputs(op, tbl, outs)
                 if op.kind == plan_ir.REDUCE:
                     scalar = out
@@ -293,15 +310,19 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                                         ctx.batch_size)]
                 continue
 
-            # streamable operator (filter / map): advance each morsel
+            # streamable operator (filter / map): advance each morsel on
+            # its shard (round-robin morsel fan-out under a sharded
+            # dispatcher; everything lands on shard 0 otherwise)
             group = None
             if coal is not None and op.udf is None:
                 backend = ctx.backend(op.tier)
                 group = coal.open(op, backend, backend.tier.name,
-                                  expected=len(parts))
+                                  expected=len(parts), op_key=oi)
             parts = [
-                disp.defer(p, lambda value, ready, op=op, group=group, i=i:
-                           step(op, group, i, value, ready))
+                disp.defer(p,
+                           lambda value, ready, op=op, oi=oi, group=group,
+                           i=i: step(op, oi, group, i, value, ready),
+                           shard=disp.shard_of(i))
                 for i, p in enumerate(parts)]
 
         out_table, _ = _merge([_force(*p.result()) for p in parts])
@@ -311,6 +332,9 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
             # drained). On error it fails pending futures so blocked chain
             # tasks unwind before the dispatcher's pool shutdown.
             coal.close()
+        # sharded dispatch: merge per-shard staging meters into ctx.meter
+        # (deterministic combined call log); no-op on single-host drivers
+        disp.finalize(meter)
     return ExecutionResult(
         table=None if is_reduce else out_table,
         scalar=scalar, meter=meter, wall_s=disp.wall_s,

@@ -118,7 +118,8 @@ def optimize(plan: plan_ir.LogicalPlan, table: Table,
         return cost_mod.plan_cost(p, table.n_rows,
                                   default_tier=ctx.default_tier,
                                   concurrency=ctx.concurrency,
-                                  batch_size=ctx.batch_size).cost
+                                  batch_size=ctx.batch_size,
+                                  shards=ctx.shards).cost
 
     c0 = plan_cost_of(plan)
     cands: List[Candidate] = [Candidate(plan, c0, 1.0, None, "init")]
@@ -185,7 +186,8 @@ def optimize_beam(plan: plan_ir.LogicalPlan, table: Table,
         return cost_mod.plan_cost(p, table.n_rows,
                                   default_tier=ctx.default_tier,
                                   concurrency=ctx.concurrency,
-                                  batch_size=ctx.batch_size).cost
+                                  batch_size=ctx.batch_size,
+                                  shards=ctx.shards).cost
 
     c0 = plan_cost_of(plan)
     cands: List[Candidate] = [Candidate(plan, c0, 1.0, None, "init")]

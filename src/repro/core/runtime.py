@@ -38,6 +38,21 @@ Four pieces:
   across drivers (this closes PR 2's documented corner where duplicate
   values could land in different batched calls per driver).
 
+  A third layer sits above both drivers:
+  ``distributed.morsel_shards.ShardedDispatcher`` (``ctx.shards > 1``)
+  partitions the morsel stream round-robin across N shard workers, each
+  backed by its own inner dispatcher — pool-per-(shard, tier) under
+  threads (explicit ``per_tier_concurrency`` caps are *serving quotas*
+  split across shards, remainder to shard 0; the default ``concurrency``
+  is each shard's own replica width), one shared event scheduler with
+  per-(shard, tier) pools under simulation. Morsel chains advance on
+  per-shard chain pools; per-shard staging meters merge deterministically
+  (``UsageMeter.merge``, sorted by logical call key) into the context
+  meter when the executor finalizes. Batch formation stays *global*
+  (one reorder buffer in morsel order, shared cache dedupe) so results,
+  call counts, and per-tier totals are shard-count invariant; only batch
+  *execution* round-robins across the (shard, tier) pools.
+
 * :class:`BatchCoalescer` — cross-morsel batch packing. With
   ``batch_size > 1`` a selective upstream filter emits ragged morsels
   whose remainder rows each burn a full batch slot downstream
@@ -280,7 +295,8 @@ class OutputCache:
 
 def run_backend_calls(op: plan_ir.Operator, values: Sequence[Any], backend,
                       meter: bk.UsageMeter, batch_size: int = 1,
-                      fanout: Optional[Callable] = None) -> List[Any]:
+                      fanout: Optional[Callable] = None,
+                      key: Optional[tuple] = None) -> List[Any]:
     """Invoke the backend over ``values``. Without a ``fanout`` the whole
     request is one inline ``run_values`` (the backend batches internally).
     With a ``fanout`` — a callable mapping a list of thunks to their results,
@@ -288,27 +304,44 @@ def run_backend_calls(op: plan_ir.Operator, values: Sequence[Any], backend,
     becomes its own ``run_values`` call on the tier's worker pool, so the
     per-call latencies genuinely overlap. Chunk boundaries equal the
     backend's internal batching, so call counts and meter totals match the
-    inline path exactly."""
+    inline path exactly.
+
+    ``key`` is the call site's logical identity (e.g. ``(op, morsel)``);
+    it is re-entered as the meter's ambient key *inside* each thunk so the
+    billed entries carry it even when they run on a tier-pool thread —
+    ``UsageMeter.merge`` sorts by these keys for deterministic shard-merge
+    logs."""
     values = list(values)
     if fanout is None:
-        return backend.run_values(op, values, meter=meter,
-                                  batch_size=batch_size)
+        if key is None:
+            return backend.run_values(op, values, meter=meter,
+                                      batch_size=batch_size)
+        with meter.keyed(key):
+            return backend.run_values(op, values, meter=meter,
+                                      batch_size=batch_size)
     if op.kind == plan_ir.REDUCE:
         chunks = [values]
     else:
         step = max(1, int(batch_size))
         chunks = [values[i:i + step] for i in range(0, len(values), step)]
-    thunks = [
-        (lambda c=c: backend.run_values(op, c, meter=meter,
-                                        batch_size=batch_size))
-        for c in chunks]
+
+    def call(c, j):
+        if key is None:
+            return backend.run_values(op, c, meter=meter,
+                                      batch_size=batch_size)
+        with meter.keyed(tuple(key) + (j,)):
+            return backend.run_values(op, c, meter=meter,
+                                      batch_size=batch_size)
+
+    thunks = [(lambda c=c, j=j: call(c, j)) for j, c in enumerate(chunks)]
     return [o for part in fanout(thunks) for o in part]
 
 
 def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
                meter: bk.UsageMeter, *, batch_size: int = 1,
                cache: Optional[OutputCache] = None,
-               fanout: Optional[Callable] = None):
+               fanout: Optional[Callable] = None,
+               key: Optional[tuple] = None):
     """Execute one LLM operator, via the cache when provided. Returns
     (outputs, n_calls_made, latency_of_calls_made).
 
@@ -330,7 +363,7 @@ def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
 
     if cache is None:
         outs = run_backend_calls(op, values, backend, meter, batch_size,
-                                 fanout)
+                                 fanout, key=key)
         n, lat = deltas(True)
         return outs, n, lat
 
@@ -350,7 +383,7 @@ def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
                 return [got], 0, 0.0
         try:
             outs = run_backend_calls(op, values, backend, meter, batch_size,
-                                     fanout)
+                                     fanout, key=key)
         except BaseException:
             cache.release([rkey], token)
             raise
@@ -365,7 +398,7 @@ def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
     try:
         if own:
             got = run_backend_calls(op, [values[i] for i in own], backend,
-                                    meter, batch_size, fanout)
+                                    meter, batch_size, fanout, key=key)
             for i, o in zip(own, got):
                 outs[i] = o
                 cache.publish(keys[i], o)
@@ -379,7 +412,7 @@ def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
             ok, val = cache.wait_value(keys[i], v)
             if not ok:   # the owning caller failed: compute solo
                 val = run_backend_calls(op, [values[i]], backend, meter,
-                                        batch_size, fanout)[0]
+                                        batch_size, fanout, key=key)[0]
                 cache.publish(keys[i], val)
             outs[i] = val
     n, lat = deltas(bool(own))
@@ -506,9 +539,31 @@ class Dispatcher:
       checkpoint(meter, cursor)   optimizer stage boundary (drain+barrier
                                   under simulation, no-op under threads)
       wall_s                      modeled makespan / measured elapsed
+
+    The shard hooks (``n_shards`` / ``shard_of`` / the ``shard=`` keyword
+    on defer/run_llm/run_host, ``meter_for`` and ``finalize``) are no-ops
+    on the single-host dispatchers; ``distributed.morsel_shards.
+    ShardedDispatcher`` overrides them to route morsels to per-shard
+    worker pools and stage per-shard meters.
     """
 
     kind = "abstract"
+    n_shards = 1
+
+    def shard_of(self, morsel_idx: int) -> int:
+        """Which shard owns morsel ``morsel_idx`` (round-robin when
+        sharded; always 0 on single-host dispatchers)."""
+        return 0
+
+    def meter_for(self, meter: bk.UsageMeter, shard: int) -> bk.UsageMeter:
+        """The meter a call on ``shard`` should bill into (a per-shard
+        staging meter when sharded, ``meter`` itself otherwise)."""
+        return meter
+
+    def finalize(self, meter: bk.UsageMeter) -> None:
+        """Merge any per-shard staging for ``meter`` back into it
+        (deterministic combined call log). No-op on single-host
+        dispatchers; the executor calls this once per execution."""
 
     def done(self, value, finish: float = 0.0) -> _DoneTask:
         return _DoneTask(value, finish)
@@ -536,20 +591,22 @@ class SimulatedDispatcher(Dispatcher):
     def __init__(self, scheduler: EventScheduler):
         self.sched = scheduler
 
-    def defer(self, task, fn):
+    def defer(self, task, fn, shard: int = 0):
         value, ready = task.result()
         return _DoneTask(*fn(value, ready))
 
     def run_llm(self, op, values, backend, tier_name, meter, *,
                 batch_size: int = 1, cache: Optional[OutputCache] = None,
-                ready_s: float = 0.0):
+                ready_s: float = 0.0, shard: int = 0,
+                key: Optional[tuple] = None):
         cursor = len(meter.call_log)
         outs, _, _ = run_llm_op(op, values, backend, tier_name, meter,
-                                batch_size=batch_size, cache=cache)
+                                batch_size=batch_size, cache=cache, key=key)
         _, finish = self.sched.drain(meter, cursor, ready_s=ready_s)
         return outs, finish
 
-    def run_host(self, fn, n_rows: int, ready_s: float = 0.0):
+    def run_host(self, fn, n_rows: int, ready_s: float = 0.0,
+                 shard: int = 0):
         finish = self.sched.submit(HOST_TIER,
                                    n_rows * UDF_SECONDS_PER_ROW,
                                    ready_s=ready_s)
@@ -581,7 +638,8 @@ class ThreadPoolDispatcher(Dispatcher):
 
     def __init__(self, concurrency: int = 16,
                  per_tier: Optional[Dict[str, int]] = None,
-                 mode: str = "async", chain_workers: int = 32):
+                 mode: str = "async", chain_workers: int = 32,
+                 host_lock: Optional[threading.Lock] = None):
         if mode not in ("sync", "async"):
             raise ValueError(f"unknown dispatcher mode {mode!r}")
         self.mode = mode
@@ -591,7 +649,10 @@ class ThreadPoolDispatcher(Dispatcher):
         self._lock = threading.Lock()
         self._chain = ThreadPoolExecutor(max_workers=max(1, chain_workers),
                                          thread_name_prefix="morsel")
-        self._host_lock = threading.Lock()
+        # shard workers in one process share a host lock (UDF compute is
+        # one Python interpreter no matter how many shards dispatch it)
+        self._host_lock = host_lock if host_lock is not None \
+            else threading.Lock()
         self._t0 = time.perf_counter()
         self._last = self._t0
 
@@ -626,7 +687,7 @@ class ThreadPoolDispatcher(Dispatcher):
 
         return fan
 
-    def defer(self, task, fn):
+    def defer(self, task, fn, shard: int = 0):
         def chain():
             value, ready = task.result()
             return fn(value, ready)
@@ -635,13 +696,15 @@ class ThreadPoolDispatcher(Dispatcher):
 
     def run_llm(self, op, values, backend, tier_name, meter, *,
                 batch_size: int = 1, cache: Optional[OutputCache] = None,
-                ready_s: float = 0.0):
+                ready_s: float = 0.0, shard: int = 0,
+                key: Optional[tuple] = None):
         outs, _, _ = run_llm_op(op, values, backend, tier_name, meter,
                                 batch_size=batch_size, cache=cache,
-                                fanout=self.fanout(tier_name))
+                                fanout=self.fanout(tier_name), key=key)
         return outs, 0.0
 
-    def run_host(self, fn, n_rows: int, ready_s: float = 0.0):
+    def run_host(self, fn, n_rows: int, ready_s: float = 0.0,
+                 shard: int = 0):
         # one Python process: host UDF work serializes against itself but
         # overlaps in-flight backend I/O
         with self._host_lock:
@@ -720,11 +783,14 @@ class _Slot:
 
 
 class _Batch:
-    __slots__ = ("slots", "ready")
+    __slots__ = ("slots", "ready", "seq", "shard")
 
-    def __init__(self, slots: List[_Slot], ready: float):
+    def __init__(self, slots: List[_Slot], ready: float, seq: int = 0,
+                 shard: int = 0):
         self.slots = slots
         self.ready = ready
+        self.seq = seq           # formation ordinal within the op group
+        self.shard = shard       # which (shard, tier) pool executes it
 
 
 class _OpGroup:
@@ -733,14 +799,19 @@ class _OpGroup:
     Submissions may arrive in any thread order; a reorder buffer admits
     them into batch formation strictly by morsel index, so the batches are
     the logical-row-order chunks whole-table batching would form —
-    deterministic, and identical across drivers."""
+    deterministic, and identical across drivers *and shard counts* (under
+    a sharded dispatcher, formation stays global; only the execution of a
+    flushed batch round-robins across the (shard, tier) pools by its
+    formation ordinal)."""
 
     def __init__(self, coal: "BatchCoalescer", op, backend, tier_name: str,
-                 expected: int):
+                 expected: int, op_key: Optional[int] = None):
         self.coal = coal
         self.op = op
         self.backend = backend
         self.tier = tier_name
+        self.op_key = op_key
+        self.batch_seq = 0
         self.expected = max(1, int(expected))
         self.lock = threading.Lock()
         self.stash: Dict[int, tuple] = {}      # morsel idx -> (vals, rdy, st)
@@ -836,7 +907,10 @@ class _OpGroup:
         ready = launch if launch is not None else \
             max((s.ready for s in slots), default=0.0)
         self.queue_ready = 0.0
-        batches.append(_Batch(slots, ready))
+        seq = self.batch_seq
+        self.batch_seq += 1
+        batches.append(_Batch(slots, ready, seq,
+                              seq % max(1, self.coal.disp.n_shards)))
         self.coal.stats["flushes"] += 1
         if partial:
             self.coal.stats["partial_flushes"] += 1
@@ -862,11 +936,13 @@ class _OpGroup:
             t.join()
 
     def _run_batch(self, b: _Batch) -> None:
+        key = None if self.op_key is None else (self.op_key, b.seq)
         try:
             outs, finish = self.coal.disp.run_llm(
                 self.op, [s.value for s in b.slots], self.backend,
                 self.tier, self.coal.meter, batch_size=self.coal.batch,
-                cache=self.coal.cache, ready_s=b.ready)
+                cache=self.coal.cache, ready_s=b.ready, shard=b.shard,
+                key=key)
         except BaseException as e:        # backend failure: fail the rows,
             self._fail_batch(b, e)        # don't hang downstream morsels
             return
@@ -888,15 +964,23 @@ class _OpGroup:
         for state, _ in targets:
             state.fail(exc)
 
+    def cut_expired(self, now: float) -> List[_Batch]:
+        """Cut (but do not execute) a partial batch whose oldest row has
+        waited longer than ``linger_s``. Lock-held and non-blocking, so
+        the shared linger ticker can harvest expired batches from every
+        group without ever waiting on a backend call."""
+        batches: List[_Batch] = []
+        with self.lock:
+            if (self.queue and not self.closed
+                    and self.coal.linger_s is not None
+                    and now - self.queue_since >= self.coal.linger_s):
+                self._cut(batches, partial=len(self.queue) < self.coal.batch)
+        return batches
+
     def flush_expired(self, now: float) -> None:
         """Timer hook (threads driver): flush a partial batch whose oldest
         row has waited longer than ``linger_s``."""
-        batches: List[_Batch] = []
-        with self.lock:
-            if (self.queue and self.coal.linger_s is not None
-                    and now - self.queue_since >= self.coal.linger_s):
-                self._cut(batches, partial=len(self.queue) < self.coal.batch)
-        self._execute(batches)
+        self._execute(self.cut_expired(now))
 
     def close(self, exc: Optional[BaseException] = None) -> None:
         with self.lock:
@@ -908,6 +992,66 @@ class _OpGroup:
                 st.fail(err)
 
 
+class _LingerTicker:
+    """One process-wide ``coalesce-linger`` daemon serving *every*
+    registered :class:`BatchCoalescer`.
+
+    Per-coalescer timer threads multiply under sharded execution
+    (shards x concurrent executions would each spawn one); instead every
+    coalescer with a wall-time linger registers here, the single daemon
+    ticks at a quarter of the smallest registered linger, and it parks
+    (then exits) when the registry drains so idle processes carry no
+    timer thread at all."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._coals: Dict[int, "BatchCoalescer"] = {}
+        self._wake = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def register(self, coal: "BatchCoalescer") -> None:
+        with self._lock:
+            self._coals[id(coal)] = coal
+            self._wake.set()
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(target=self._loop,
+                                                name="coalesce-linger",
+                                                daemon=True)
+                self._thread.start()
+
+    def unregister(self, coal: "BatchCoalescer") -> None:
+        with self._lock:
+            self._coals.pop(id(coal), None)
+
+    def n_threads(self) -> int:
+        """Live ticker threads (for tests: must never exceed 1)."""
+        return sum(1 for t in threading.enumerate()
+                   if t.name == "coalesce-linger" and t.is_alive())
+
+    def _loop(self) -> None:
+        while True:
+            with self._lock:
+                coals = list(self._coals.values())
+                if not coals:
+                    self._wake.clear()
+            if not coals:
+                if not self._wake.wait(timeout=0.25):
+                    with self._lock:
+                        if not self._coals:
+                            self._thread = None
+                            return
+                continue
+            tick = min(max(0.002, (c.linger_s or 0.01) / 4.0)
+                       for c in coals)
+            time.sleep(tick)
+            now = time.perf_counter()
+            for c in coals:
+                c.tick(now)
+
+
+_LINGER_TICKER = _LingerTicker()
+
+
 class BatchCoalescer:
     """Cross-morsel batch packing for one execution (see module docstring).
 
@@ -915,7 +1059,9 @@ class BatchCoalescer:
     with its expected contributor count (= number of morsels entering it),
     and each morsel ``submit``s its rows once. ``stats`` records flushes,
     partial flushes, rows slotted, and follower dedupes — benchmarks and
-    tests read it from ``ExecutionResult.coalesce_stats``."""
+    tests read it from ``ExecutionResult.coalesce_stats``. Wall-time
+    linger flushes (threads driver) are driven by the shared
+    :data:`_LINGER_TICKER` daemon, not a per-coalescer thread."""
 
     def __init__(self, dispatcher: Dispatcher, meter: bk.UsageMeter, *,
                  batch_size: int, cache: Optional[OutputCache] = None,
@@ -929,41 +1075,54 @@ class BatchCoalescer:
                       "dedup_follows": 0}
         self._groups: List[_OpGroup] = []
         self._lock = threading.Lock()
-        self._timer: Optional[threading.Thread] = None
-        self._stop = threading.Event()
+        self._ticking = False
 
-    def open(self, op, backend, tier_name: str, expected: int) -> _OpGroup:
-        g = _OpGroup(self, op, backend, tier_name, expected)
+    def open(self, op, backend, tier_name: str, expected: int,
+             op_key: Optional[int] = None) -> _OpGroup:
         with self._lock:
+            if op_key is None:
+                op_key = len(self._groups)
+            g = _OpGroup(self, op, backend, tier_name, expected,
+                         op_key=op_key)
             self._groups.append(g)
-        if self.linger_s is not None and self.disp.kind == "threads":
-            self._ensure_timer()
+            need_tick = (self.linger_s is not None
+                         and self.disp.kind == "threads"
+                         and not self._ticking)
+            if need_tick:
+                self._ticking = True
+        if need_tick:
+            _LINGER_TICKER.register(self)
         return g
 
-    def _ensure_timer(self) -> None:
-        with self._lock:
-            if self._timer is None:
-                self._timer = threading.Thread(target=self._linger_loop,
-                                               name="coalesce-linger",
-                                               daemon=True)
-                self._timer.start()
+    def tick(self, now: float) -> None:
+        """Shared-ticker hook: flush partials whose linger expired.
 
-    def _linger_loop(self) -> None:
-        tick = max(0.002, (self.linger_s or 0.01) / 4.0)
-        while not self._stop.wait(tick):
-            with self._lock:
-                groups = list(self._groups)
-            now = time.perf_counter()
-            for g in groups:
-                g.flush_expired(now)
+        The cut happens here (cheap, lock-held, non-blocking) but the
+        flushed batches execute on an ephemeral thread — the ticker
+        daemon is shared by every coalescer in the process, so it must
+        never block on one coalescer's backend call (a 2 s call would
+        otherwise stall every other coalescer's linger deadline)."""
+        with self._lock:
+            groups = list(self._groups)
+        work = [(g, b) for g in groups for b in [g.cut_expired(now)] if b]
+        if not work:
+            return
+
+        def execute():
+            for g, batches in work:
+                g._execute(batches)
+
+        threading.Thread(target=execute, name="coalesce-linger-flush",
+                         daemon=True).start()
 
     def close(self, exc: Optional[BaseException] = None) -> None:
-        """Stop the linger timer and fail any unresolved morsel futures so
-        blocked chain tasks unwind (error paths must not deadlock the
-        dispatcher's chain-pool shutdown)."""
-        self._stop.set()
-        if self._timer is not None:
-            self._timer.join(timeout=5.0)
+        """Deregister from the shared linger ticker and fail any
+        unresolved morsel futures so blocked chain tasks unwind (error
+        paths must not deadlock the dispatcher's chain-pool shutdown)."""
+        with self._lock:
+            was_ticking, self._ticking = self._ticking, False
+        if was_ticking:
+            _LINGER_TICKER.unregister(self)
         with self._lock:
             groups = list(self._groups)
         for g in groups:
@@ -991,7 +1150,20 @@ class ExecutionContext:
     rows from different morsels into full batches instead of paying
     per-morsel ragged-remainder calls; ``linger_s`` bounds how long a
     partial batch may wait for more rows before flushing (None = only the
-    morsel-boundary watermark flushes partials)."""
+    morsel-boundary watermark flushes partials).
+
+    ``shards > 1`` runs the morsel stream through a
+    ``distributed.morsel_shards.ShardedDispatcher``: morsels round-robin
+    across shard workers, each with its own pool-per-(shard, tier)
+    dispatcher under the selected ``driver``. Explicit
+    ``per_tier_concurrency`` caps are treated as global serving quotas
+    split across shards (remainder to shard 0); the default
+    ``concurrency`` is each shard's own replica width. ``shard_cache``
+    selects ``"shared"`` (default: one process-wide ``OutputCache``, so
+    cross-shard duplicates bill once through the single-flight protocol
+    and results/calls/meters are shard-count invariant) or ``"local"``
+    (each shard memoizes independently — cheaper coordination, duplicate
+    billing across shards)."""
     backends: Dict[str, bk.Backend]
     default_tier: str = "m*"
     concurrency: int = 16
@@ -1002,6 +1174,8 @@ class ExecutionContext:
     driver: str = "simulated"
     coalesce: bool = True
     linger_s: Optional[float] = None
+    shards: int = 1
+    shard_cache: str = "shared"
     cache: Optional[OutputCache] = None
     meter: bk.UsageMeter = dataclasses.field(default_factory=bk.UsageMeter)
 
@@ -1014,13 +1188,21 @@ class ExecutionContext:
                               mode=self.mode)
 
     def make_dispatcher(self) -> Dispatcher:
+        if self.driver not in DRIVERS:
+            raise ValueError(f"unknown driver {self.driver!r} "
+                             f"(expected one of {DRIVERS})")
+        if self.shards > 1:
+            # local import: morsel_shards builds on this module
+            from repro.distributed.morsel_shards import ShardedDispatcher
+            return ShardedDispatcher(
+                shards=self.shards, driver=self.driver,
+                concurrency=self.concurrency,
+                per_tier=self.per_tier_concurrency, mode=self.mode,
+                shared_cache=self.shard_cache != "local")
         if self.driver == "threads":
             return ThreadPoolDispatcher(self.concurrency,
                                         per_tier=self.per_tier_concurrency,
                                         mode=self.mode)
-        if self.driver != "simulated":
-            raise ValueError(f"unknown driver {self.driver!r} "
-                             f"(expected one of {DRIVERS})")
         return SimulatedDispatcher(self.make_scheduler())
 
     def fork(self, **overrides) -> "ExecutionContext":

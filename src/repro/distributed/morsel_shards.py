@@ -1,0 +1,285 @@
+"""Morsel-parallel sharded execution: pool-per-(shard, tier) dispatch.
+
+The single-host ``runtime.ThreadPoolDispatcher`` (PR 2) overlaps one
+execution's backend calls on per-tier worker pools; this module
+generalizes that shape to **N shard workers**: the executor's morsel
+stream is partitioned round-robin by morsel index, each shard runs behind
+the existing :class:`runtime.Dispatcher` interface with its *own* inner
+dispatcher, and shard outputs merge back in logical morsel order
+(``Table.concat`` in the executor) with per-shard staging meters combined
+by ``UsageMeter.merge`` into one deterministic call log.
+
+Concurrency semantics
+---------------------
+* Explicit ``per_tier_concurrency`` caps are **serving quotas** for a
+  model tier — a global resource. They are *split* across shards
+  (integer division, remainder to shard 0), so for any quota >= the
+  shard count the total in-flight calls against that tier never exceed
+  the cap (:func:`split_quota`). A quota *smaller* than the shard count
+  cannot be honored exactly: every shard needs at least one worker to
+  make progress, so the floor-of-1 deliberately over-subscribes by up to
+  ``shards - quota`` calls rather than starving (and deadlocking)
+  shards — use fewer shards if the quota is that tight.
+* The default ``concurrency`` is a shard-local replica width: each shard
+  worker models its own serving replica, so adding shards adds capacity
+  for un-quota'd tiers. This is what the shard-scaling benchmark
+  (``benchmarks/bench_shard.py``) measures.
+
+Drivers
+-------
+* ``threads``: one ``ThreadPoolDispatcher`` per shard — a pool per
+  (shard, tier) plus a per-shard chain pool; shard workers genuinely
+  overlap and ``wall_s`` is measured. Host (UDF) compute still serializes
+  process-wide through one shared lock.
+* ``simulated``: one shard-aware :class:`ShardEventScheduler` shared by
+  every shard (jobs land on composite ``(shard, tier)`` pools; host
+  compute stays one global worker), driven through per-shard
+  ``SimulatedDispatcher`` views — so Table-9 accounting stays a single
+  deterministic event replay.
+
+Shard-count invariance
+----------------------
+Results, call counts, and per-tier meter totals are identical for any
+shard count (test-enforced for shards in {1, 2, 4} under both drivers):
+morsel boundaries don't depend on the shard count, batch formation in the
+``BatchCoalescer`` stays *global* (one reorder buffer in morsel order —
+only batch execution round-robins across shard pools), and the default
+process-wide shared ``OutputCache`` bills cross-shard duplicates once
+through the single-flight claim/publish protocol. ``shared_cache=False``
+(``ctx.shard_cache = "local"``) opts into shard-local memoization —
+cheaper coordination, but cross-shard duplicates then bill per shard, so
+it deliberately trades the invariance guarantee away.
+
+Metering
+--------
+Calls bill into per-(target meter, shard) staging meters; the executor
+calls :meth:`ShardedDispatcher.finalize` once per execution, which merges
+the staging meters into the target with ``UsageMeter.merge`` — entries
+sort by their logical (operator, morsel/batch, chunk, call) key, so two
+threaded sharded runs that made the same calls report byte-identical
+combined logs regardless of thread arrival order.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import backends as bk
+from repro.core import runtime as rt
+
+# composite tier-name encoding for the shared event scheduler's
+# per-(shard, tier) pools
+_SHARD_SEP = "\x1f"
+_SHARD_MARK = "\x02"
+
+
+def split_quota(total: int, shards: int) -> List[int]:
+    """Split a per-tier serving quota into per-shard shares: integer
+    division with the remainder to shard 0, and a floor of one worker per
+    shard (a quota smaller than the shard count over-subscribes rather
+    than starving shards)."""
+    shards = max(1, int(shards))
+    total = max(1, int(total))
+    base, rem = divmod(total, shards)
+    return [max(1, base + (rem if s == 0 else 0)) for s in range(shards)]
+
+
+def _compose(shard: int, tier: str) -> str:
+    if tier == rt.HOST_TIER:        # one Python process: host work is one
+        return tier                 # global resource, never sharded
+    return f"{_SHARD_MARK}{shard}{_SHARD_SEP}{tier}"
+
+
+def _decompose(tier: str) -> Tuple[Optional[int], str]:
+    if tier.startswith(_SHARD_MARK) and _SHARD_SEP in tier:
+        shard, base = tier[1:].split(_SHARD_SEP, 1)
+        return int(shard), base
+    return None, tier
+
+
+class ShardEventScheduler(rt.EventScheduler):
+    """An :class:`runtime.EventScheduler` whose pools are keyed by
+    composite (shard, tier) names: quota'd tiers get their split share
+    per shard, un-quota'd tiers get the full default width per shard
+    (each shard is its own replica). ``mode="sync"`` still collapses
+    everything onto one worker — sequential accounting is shard-blind."""
+
+    def __init__(self, shards: int, concurrency: int = 16,
+                 per_tier: Optional[Dict[str, int]] = None,
+                 mode: str = "async"):
+        super().__init__(concurrency, per_tier=None, mode=mode)
+        self.shards = max(1, int(shards))
+        self._base_per_tier = dict(per_tier or {})
+
+    def workers(self, tier: str) -> int:
+        if self.mode == "sync" or tier == rt.HOST_TIER:
+            return 1
+        shard, base = _decompose(tier)
+        quota = self._base_per_tier.get(base)
+        if quota is not None:
+            return split_quota(quota, self.shards)[shard or 0]
+        return max(1, int(self.concurrency))
+
+
+class _ShardSchedulerView:
+    """The scheduler one shard's ``SimulatedDispatcher`` sees: submits
+    land on the shared :class:`ShardEventScheduler` under composite
+    (shard, tier) pool names, so every shard replays onto ONE event
+    timeline (deterministic Table-9 accounting) while still respecting
+    its own serving quota."""
+
+    def __init__(self, sched: ShardEventScheduler, shard: int):
+        self._sched = sched
+        self._shard = shard
+
+    def submit(self, tier: str, duration_s: float,
+               ready_s: float = 0.0) -> float:
+        return self._sched.submit(_compose(self._shard, tier), duration_s,
+                                  ready_s=ready_s)
+
+    def drain(self, meter: bk.UsageMeter, cursor: int,
+              ready_s: float = 0.0) -> Tuple[int, float]:
+        log = meter.call_log
+        finish = ready_s
+        for tier, lat in log[cursor:]:
+            finish = max(finish, self.submit(tier, lat, ready_s))
+        return len(log), finish
+
+    def barrier(self) -> float:
+        return self._sched.barrier()
+
+    @property
+    def makespan(self) -> float:
+        return self._sched.makespan
+
+
+class ShardedDispatcher(rt.Dispatcher):
+    """N shard workers behind the single ``Dispatcher`` interface.
+
+    The executor routes every morsel task to ``shard_of(morsel_idx)``
+    (round-robin); each shard's chains and backend calls run on that
+    shard's inner dispatcher. ``kind`` reports the underlying driver so
+    driver-conditional logic (coalescer linger mode, ephemeral flush
+    threads) behaves identically to the unsharded dispatchers.
+
+    Liveness under threads is the PR 2 chain-FIFO argument applied per
+    shard: the executor defers tasks in operator-major order, so within
+    every shard's FIFO a task's intra-shard dependency is earlier in the
+    queue, and cross-shard waits (a coalesced batch needing another
+    shard's submission, a cache follower awaiting another shard's
+    publish) resolve on that *other* shard's pools, which progress
+    independently."""
+
+    def __init__(self, shards: int, driver: str = "threads",
+                 concurrency: int = 16,
+                 per_tier: Optional[Dict[str, int]] = None,
+                 mode: str = "async", shared_cache: bool = True):
+        if driver not in rt.DRIVERS:
+            raise ValueError(f"unknown driver {driver!r} "
+                             f"(expected one of {rt.DRIVERS})")
+        self.n_shards = max(1, int(shards))
+        self.kind = driver
+        self.concurrency = max(1, int(concurrency))
+        self.per_tier = dict(per_tier or {})
+        self.shared_cache = bool(shared_cache)
+        self._lock = threading.Lock()
+        self._local_caches: Dict[int, rt.OutputCache] = {}
+        # target-meter id -> (target ref, per-shard staging meters)
+        self._staging: Dict[int, Tuple[bk.UsageMeter,
+                                       List[bk.UsageMeter]]] = {}
+        self._sched: Optional[ShardEventScheduler] = None
+        if driver == "simulated":
+            self._sched = ShardEventScheduler(self.n_shards,
+                                              self.concurrency,
+                                              per_tier=self.per_tier,
+                                              mode=mode)
+            self._inner: List[rt.Dispatcher] = [
+                rt.SimulatedDispatcher(_ShardSchedulerView(self._sched, s))
+                for s in range(self.n_shards)]
+        else:
+            host_lock = threading.Lock()
+            self._inner = [
+                rt.ThreadPoolDispatcher(
+                    self.concurrency,
+                    per_tier={t: split_quota(q, self.n_shards)[s]
+                              for t, q in self.per_tier.items()},
+                    mode=mode, host_lock=host_lock)
+                for s in range(self.n_shards)]
+
+    # -- shard routing ---------------------------------------------------
+    def shard_of(self, morsel_idx: int) -> int:
+        return morsel_idx % self.n_shards
+
+    def shard_quota(self, tier: str, shard: int) -> int:
+        """The (shard, tier) pool width actually in force."""
+        quota = self.per_tier.get(tier)
+        if quota is not None:
+            return split_quota(quota, self.n_shards)[shard]
+        return self.concurrency
+
+    # -- metering --------------------------------------------------------
+    def meter_for(self, meter: bk.UsageMeter, shard: int) -> bk.UsageMeter:
+        with self._lock:
+            entry = self._staging.get(id(meter))
+            if entry is None or entry[0] is not meter:
+                entry = (meter, [bk.UsageMeter()
+                                 for _ in range(self.n_shards)])
+                self._staging[id(meter)] = entry
+            return entry[1][shard]
+
+    def finalize(self, meter: bk.UsageMeter) -> None:
+        with self._lock:
+            entry = self._staging.pop(id(meter), None)
+        if entry is not None:
+            meter.absorb(bk.UsageMeter.merge(entry[1]))
+
+    def _cache_for(self, cache: Optional[rt.OutputCache],
+                   shard: int) -> Optional[rt.OutputCache]:
+        if cache is None or self.shared_cache:
+            return cache
+        with self._lock:
+            local = self._local_caches.get(shard)
+            if local is None:
+                local = self._local_caches[shard] = rt.OutputCache()
+            return local
+
+    # -- Dispatcher interface --------------------------------------------
+    def defer(self, task, fn, shard: int = 0):
+        return self._inner[shard].defer(task, fn)
+
+    def fanout(self, tier_name: str):
+        # non-sharded callers (optimizer sample flows) run on shard 0
+        return self._inner[0].fanout(tier_name)
+
+    def run_llm(self, op, values, backend, tier_name, meter, *,
+                batch_size: int = 1,
+                cache: Optional[rt.OutputCache] = None,
+                ready_s: float = 0.0, shard: int = 0,
+                key: Optional[tuple] = None):
+        return self._inner[shard].run_llm(
+            op, values, backend, tier_name, self.meter_for(meter, shard),
+            batch_size=batch_size, cache=self._cache_for(cache, shard),
+            ready_s=ready_s, key=key)
+
+    def run_host(self, fn, n_rows: int, ready_s: float = 0.0,
+                 shard: int = 0):
+        return self._inner[shard].run_host(fn, n_rows, ready_s=ready_s)
+
+    def checkpoint(self, meter: bk.UsageMeter, cursor: int) -> int:
+        return self._inner[0].checkpoint(meter, cursor)
+
+    @property
+    def wall_s(self) -> float:
+        if self._sched is not None:
+            return self._sched.makespan
+        return max(d.wall_s for d in self._inner)
+
+    def close(self) -> None:
+        # absorb any staging a caller never finalized so usage is not lost
+        with self._lock:
+            leftovers = list(self._staging.values())
+            self._staging.clear()
+        for target, stages in leftovers:
+            target.absorb(bk.UsageMeter.merge(stages))
+        for d in self._inner:
+            d.close()

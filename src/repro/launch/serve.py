@@ -24,6 +24,11 @@ packs batch slots across morsel boundaries; ``--linger S`` bounds how
 long a partial batch may wait for more rows (the analytics-level
 counterpart of the ContinuousBatcher's slot-fill policy), and
 ``--no-coalesce`` restores per-morsel batching.
+
+``--shards N`` runs the morsel stream through the sharded dispatcher
+(``distributed.morsel_shards``): morsels round-robin across N shard
+workers, each with its own pool-per-(shard, tier); results, call counts,
+and meter totals are identical to ``--shards 1``.
 """
 from __future__ import annotations
 
@@ -72,11 +77,12 @@ def serve_semantic(args):
                               driver=args.driver,
                               batch_size=args.batch,
                               coalesce=args.coalesce,
-                              linger_s=args.linger)
+                              linger_s=args.linger,
+                              shards=args.shards)
     q = WORKLOADS[args.semantic][0]
     print(f"[serve] semantic query {q.qid} over {table.name} "
           f"({table.n_rows} rows), m1 = {cfg.name} on {args.slots} slots, "
-          f"driver={args.driver} batch={args.batch} "
+          f"driver={args.driver} shards={args.shards} batch={args.batch} "
           f"coalesce={args.coalesce} linger={args.linger}")
     t0 = time.time()
     res = ex.execute(q.plan_for(table), table, ctx)
@@ -118,6 +124,11 @@ def build_parser() -> argparse.ArgumentParser:
                     default="threads",
                     help="--semantic execution driver: real thread pools "
                          "(measured wall) or the event-model simulation")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="--semantic: morsel-parallel shard workers "
+                         "(pool-per-(shard, tier) dispatch; morsels "
+                         "round-robin across shards, results identical "
+                         "to --shards 1)")
     ap.add_argument("--batch", type=int, default=1,
                     help="--semantic batch prompting size (records per "
                          "LLM call)")

@@ -1,0 +1,444 @@
+"""Morsel-parallel sharded execution suite: shard-count invariance of
+results / call counts / per-tier meter totals under both drivers (incl.
+the batch>1 + shared cache + cross-shard duplicates corner), per-shard
+serving-quota bounds, deterministic merged call logs (UsageMeter.merge),
+shard-worker failure isolation, the shared linger ticker, the shard-aware
+cost model, and the serve.py --shards surface."""
+import random
+import threading
+import time
+
+import pytest
+
+from repro.core import backends as bk
+from repro.core import cost as cost_mod
+from repro.core import executor as ex
+from repro.core import plan as P
+from repro.core import runtime as rt
+from repro.core.table import Table
+from repro.data import load_dataset
+from repro.distributed.morsel_shards import (ShardedDispatcher,
+                                             ShardEventScheduler,
+                                             split_quota)
+from repro.testing import EchoOracle, SleepBackend
+
+SHARD_COUNTS = (1, 2, 4)
+
+
+@pytest.fixture(scope="module")
+def movie_small():
+    return load_dataset("movie", max_rows=48)
+
+
+def _chain_plan():
+    return P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 1.", "IMDB_rating"),
+        P.Operator(P.MAP, "According to the movie plot, extract the "
+                   "genre(s) of each movie.", "Plot", "Genre"),
+        P.Operator(P.REDUCE, "Count the number of movies.", "Title"),
+    ))
+
+
+def _meter_key(meter):
+    return {t: (u.calls, round(u.tok_in, 6), round(u.tok_out, 6),
+                round(u.usd, 9), round(u.latency_s, 6))
+            for t, u in sorted(meter.by_tier.items())}
+
+
+# ---------------------------------------------------------------------------
+# Shard-count invariance: the tentpole contract
+# ---------------------------------------------------------------------------
+
+def test_shard_invariance_results_and_meters(movie_small):
+    """Results, call counts, and per-tier meter totals must be identical
+    for shards in {1, 2, 4} under both drivers (the acceptance bar)."""
+    table, oracle = movie_small
+    plan = _chain_plan()
+    ref = None
+    for driver in rt.DRIVERS:
+        for shards in SHARD_COUNTS:
+            meter = bk.UsageMeter()
+            res = ex.execute(plan, table, bk.make_backends(oracle),
+                             default_tier="m*", morsel_size=8,
+                             driver=driver, shards=shards, meter=meter)
+            key = (res.scalar, res.is_reduce, res.rows_processed,
+                   meter.total.calls, _meter_key(meter))
+            if ref is None:
+                ref = key
+            assert key == ref, (driver, shards)
+
+
+def test_shard_invariance_table_outputs(movie_small):
+    table, oracle = movie_small
+    plan = P.LogicalPlan(_chain_plan().ops[:2])     # filter -> map
+    ref = None
+    for driver in rt.DRIVERS:
+        for shards in SHARD_COUNTS:
+            res = ex.execute(plan, table, bk.make_backends(oracle),
+                             default_tier="m*", morsel_size=8,
+                             driver=driver, shards=shards)
+            key = (res.table.columns[ex.ROWID], res.table.columns["Genre"])
+            if ref is None:
+                ref = key
+            assert key == ref, (driver, shards)
+
+
+def test_shard_invariance_batched_shared_cache_duplicates():
+    """The PR 2/3 corner under sharding: batch_size > 1 + shared cache +
+    duplicate values split across morsels that land on *different shards*
+    must produce identical call grouping, billing, and outputs for every
+    shard count and driver — batch formation stays global and the shared
+    single-flight cache bills cross-shard duplicates once."""
+    oracle = EchoOracle()
+    table = Table({"v": [str(i % 8) for i in range(32)]}, name="dups")
+    plan = P.LogicalPlan((P.Operator(P.MAP, "annotate", "v", "a"),))
+    ref = None
+    for driver in rt.DRIVERS:
+        for shards in SHARD_COUNTS:
+            backend = SleepBackend(oracle, delay_s=0.003)
+            cache = rt.OutputCache()
+            meter = bk.UsageMeter()
+            res = ex.execute(plan, table, {"m*": backend},
+                             default_tier="m*", batch_size=4,
+                             morsel_size=8, cache=cache, meter=meter,
+                             driver=driver, shards=shards)
+            key = (sorted(backend.groups), backend.calls_made,
+                   cache.misses, cache.hits, meter.total.calls,
+                   res.table.columns["a"])
+            if ref is None:
+                ref = key
+            assert key == ref, (driver, shards)
+    groups, calls, misses, hits, metered, _ = ref
+    # 8 unique values dedupe into exactly two full batches of 4, shard-
+    # count invariant (the 1-shard grouping test_driver already enforces)
+    assert calls == metered == 2
+    assert groups == [("0", "1", "2", "3"), ("4", "5", "6", "7")]
+    assert misses == 8 and hits == 24
+
+
+def test_shard_coalesced_matches_barrier_batching(movie_small):
+    """Sharded coalesced execution still reproduces whole-table batching
+    exactly: ceil(survivors/batch) calls, byte-identical results."""
+    table, oracle = movie_small
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 8.", "IMDB_rating"),
+        P.Operator(P.MAP, "According to the movie plot, extract the "
+                   "genre(s) of each movie.", "Plot", "Genre"),
+    ))
+    want_meter = bk.UsageMeter()
+    want = ex.execute(plan, table, bk.make_backends(oracle),
+                      default_tier="m*", batch_size=8, morsel_size=0,
+                      coalesce=False, meter=want_meter)
+    for driver in rt.DRIVERS:
+        for shards in (2, 4):
+            meter = bk.UsageMeter()
+            res = ex.execute(plan, table, bk.make_backends(oracle),
+                             default_tier="m*", batch_size=8,
+                             morsel_size=8, driver=driver, shards=shards,
+                             meter=meter)
+            assert res.table.columns[ex.ROWID] \
+                == want.table.columns[ex.ROWID], (driver, shards)
+            assert res.table.columns["Genre"] \
+                == want.table.columns["Genre"], (driver, shards)
+            assert _meter_key(meter) == _meter_key(want_meter), \
+                (driver, shards)
+
+
+# ---------------------------------------------------------------------------
+# Quotas: per-tier caps become per-shard serving quotas
+# ---------------------------------------------------------------------------
+
+def test_shard_quota_split_remainder_to_shard_zero():
+    assert split_quota(8, 4) == [2, 2, 2, 2]
+    assert split_quota(7, 4) == [4, 1, 1, 1]     # remainder to shard 0
+    assert split_quota(2, 4) == [2, 1, 1, 1]     # floor of one worker
+    assert split_quota(16, 1) == [16]
+
+
+class _PeakBackend(SleepBackend):
+    """SleepBackend that tracks the peak number of concurrent calls."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.inflight = 0
+        self.peak = 0
+
+    def run_values(self, op, values, meter=None, batch_size=1):
+        with self._lock:
+            self.inflight += 1
+            self.peak = max(self.peak, self.inflight)
+        try:
+            return super().run_values(op, values, meter=meter,
+                                      batch_size=batch_size)
+        finally:
+            with self._lock:
+                self.inflight -= 1
+
+
+def test_shard_quota_bound_never_exceeded(movie_small):
+    """An explicit per-tier cap is a *global* serving quota: split across
+    shards, the total in-flight calls never exceed it, and each shard's
+    share really serializes (4 shards x quota 4 => 1 worker each, so the
+    measured wall shows per-shard serialization, not 32-wide dispatch)."""
+    table, oracle = movie_small
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 1.",
+                   "IMDB_rating"),))
+    backend = _PeakBackend(oracle, delay_s=0.03)
+    ctx = rt.ExecutionContext(
+        backends={"m*": backend}, default_tier="m*", concurrency=16,
+        morsel_size=4, per_tier_concurrency={"m*": 4}, driver="threads",
+        shards=4)
+    res = ex.execute(plan, table, ctx)
+    assert res.table.n_rows > 0
+    assert backend.peak <= 4                     # the global quota
+    # 48 calls over a 4-wide total quota, 0.03s each: wall >= 0.36s * 0.8
+    assert res.wall_s > 48 / 4 * 0.03 * 0.8
+    # dispatcher-level view of the same split
+    disp = ctx.make_dispatcher()
+    try:
+        assert [disp.shard_quota("m*", s) for s in range(4)] == [1, 1, 1, 1]
+        assert disp.shard_quota("other", 2) == 16   # un-quota'd: replica
+    finally:
+        disp.close()
+
+
+def test_shard_threads_wall_shows_replica_speedup(movie_small):
+    """Un-quota'd tiers scale with the shard count (each shard worker is
+    its own replica): 4 shards must beat 1 shard on a really-sleeping
+    backend with identical results. Loose 1.3x bound here (CI jitter);
+    benchmarks/bench_shard.py enforces the 1.5x acceptance bar."""
+    table, oracle = movie_small
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "The rating is higher than 1.",
+                   "IMDB_rating"),))
+    walls, rowids = {}, {}
+    for shards in (1, 4):
+        best = float("inf")
+        for _ in range(3):
+            backend = SleepBackend(oracle, delay_s=0.04)
+            res = ex.execute(plan, table, {"m*": backend},
+                             default_tier="m*", concurrency=4,
+                             morsel_size=8, driver="threads",
+                             shards=shards)
+            best = min(best, res.wall_s)
+            rowids[shards] = res.table.columns[ex.ROWID]
+        walls[shards] = best
+    assert rowids[4] == rowids[1]
+    assert walls[4] < walls[1] / 1.3
+
+
+# ---------------------------------------------------------------------------
+# UsageMeter.merge: deterministic combined call logs
+# ---------------------------------------------------------------------------
+
+def test_shard_usage_meter_merge_orders_by_logical_key():
+    """Merged call_log ordering sorts by logical (morsel, call) key, not
+    arrival time: shuffled per-shard arrival orders always merge to the
+    same log."""
+    u = bk.Usage(calls=1, tok_in=8.0, tok_out=4.0, usd=0.001, latency_s=0.05)
+    entries = [((oi, mi), f"m{oi}") for oi in range(2) for mi in range(6)]
+    logs = []
+    for seed in range(3):
+        order = entries[:]
+        random.Random(seed).shuffle(order)
+        meters = [bk.UsageMeter(), bk.UsageMeter()]
+        for key, tier in order:
+            meters[key[1] % 2].record(tier, u, key=key)
+        merged = bk.UsageMeter.merge(meters)
+        logs.append((list(merged.call_log), list(merged.call_keys)))
+        assert merged.total.calls == len(entries)
+        assert merged.by_tier["m0"].calls == 6
+        assert merged.by_tier["m1"].calls == 6
+    assert logs[0] == logs[1] == logs[2]
+    keys = logs[0][1]
+    assert keys == sorted(keys)          # logical order, per-call index last
+    assert keys[0] == (0, 0, 0)
+
+
+def test_shard_usage_meter_merge_keeps_unkeyed_entries_and_absorb():
+    a, b = bk.UsageMeter(), bk.UsageMeter()
+    u = bk.Usage(calls=1, tok_in=1.0, tok_out=1.0, usd=0.0, latency_s=0.01)
+    a.record("t", u, key=(0, 1))
+    b.record("t", u)                      # no key: ordered after keyed ones
+    b.record("t", u, key=(0, 0))
+    merged = bk.UsageMeter.merge([a, b])
+    assert merged.call_keys == [(0, 0, 0), (0, 1, 0), None]
+    assert merged.total.calls == 3
+    # absorb adds into an existing meter without mutating the source
+    target = bk.UsageMeter()
+    target.record("t", u, key=(9, 9))
+    target.absorb(merged)
+    assert target.total.calls == 4
+    assert merged.total.calls == 3
+    assert a.by_tier["t"].calls == 1
+
+
+def test_shard_threads_merged_log_is_deterministic():
+    """Two threaded sharded runs of the same pipeline report identical
+    merged call logs (keys make the order logical, not arrival-based)."""
+    oracle = EchoOracle()
+    table = Table({"v": [f"x{i}" for i in range(64)]}, name="wide")
+    plan = P.LogicalPlan((P.Operator(P.MAP, "annotate", "v", "a"),))
+    logs = []
+    for _ in range(2):
+        meter = bk.UsageMeter()
+        ex.execute(plan, table, {"m*": SleepBackend(oracle, delay_s=0.002)},
+                   default_tier="m*", morsel_size=8, driver="threads",
+                   shards=4, meter=meter)
+        logs.append((list(meter.call_log), list(meter.call_keys)))
+    assert logs[0] == logs[1]
+    assert all(k is not None for k in logs[0][1])
+
+
+# ---------------------------------------------------------------------------
+# Failure isolation
+# ---------------------------------------------------------------------------
+
+class _BoomOracle(EchoOracle):
+    def answer(self, op, value):
+        if "BOOM" in str(value):
+            raise RuntimeError("shard backend down")
+        return True if op.kind == P.FILTER else f"A:{value}"
+
+
+def test_shard_worker_failure_poisons_only_its_morsels():
+    """A backend failure inside one shard's morsels must raise (not hang):
+    the poisoned morsel keeps downstream watermarks moving, every other
+    shard's morsels complete, and the error surfaces at the merge."""
+    # rows 8..15 form morsel 1 -> shard 1 of 2; everything else is clean
+    table = Table({"v": [f"BOOM{i}" if 8 <= i < 16 else f"x{i}"
+                         for i in range(32)]}, name="boom")
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "keep", "v"),
+        P.Operator(P.MAP, "annotate", "v", "a"),
+    ))
+    for driver in rt.DRIVERS:
+        for shards in (2, 4):
+            backend = SleepBackend(_BoomOracle(), delay_s=0.0)
+            t0 = time.perf_counter()
+            with pytest.raises(RuntimeError, match="shard backend down"):
+                ex.execute(plan, table, {"m*": backend}, default_tier="m*",
+                           batch_size=8, morsel_size=8, driver=driver,
+                           shards=shards, coalesce=True)
+            assert time.perf_counter() - t0 < 30.0   # raised, not starved
+            # the healthy shards' morsels were still dispatched
+            flat = [v for g in backend.groups for v in g]
+            assert any(v.startswith("x") for v in flat)
+
+
+# ---------------------------------------------------------------------------
+# Shared linger ticker
+# ---------------------------------------------------------------------------
+
+def test_shard_linger_ticker_thread_is_shared():
+    """Multiple coalescers with wall-time lingers (e.g. shards x ops)
+    share ONE coalesce-linger daemon instead of one thread each."""
+    disp = rt.ThreadPoolDispatcher(concurrency=4)
+    backend = SleepBackend(EchoOracle(), delay_s=0.0)
+    op = P.Operator(P.MAP, "annotate", "v", "a")
+    coals = [rt.BatchCoalescer(disp, bk.UsageMeter(), batch_size=8,
+                               linger_s=0.05) for _ in range(4)]
+    futs = []
+    try:
+        for i, coal in enumerate(coals):
+            g = coal.open(op, backend, "m*", expected=2)
+            futs.append(g.submit(0, [f"c{i}a", f"c{i}b"], 0.0))
+        names = [t.name for t in threading.enumerate()
+                 if t.name == "coalesce-linger"]
+        assert len(names) == 1               # one ticker for all four
+        for i, fut in enumerate(futs):       # lingers still fire per-coal
+            outs, _ = fut.result(timeout=5)
+            assert outs == [f"A:c{i}a", f"A:c{i}b"]
+    finally:
+        for coal in coals:
+            coal.close()
+        disp.close()
+
+
+# ---------------------------------------------------------------------------
+# Simulated driver: one event timeline, per-(shard, tier) pools
+# ---------------------------------------------------------------------------
+
+def test_shard_event_scheduler_pools_split_quota():
+    sched = ShardEventScheduler(4, concurrency=16, per_tier={"m*": 8})
+    from repro.distributed.morsel_shards import _compose
+    assert sched.workers(_compose(0, "m*")) == 2
+    assert sched.workers(_compose(3, "m*")) == 2
+    assert sched.workers(_compose(1, "other")) == 16   # replica width
+    assert sched.workers(rt.HOST_TIER) == 1            # host never shards
+    sync = ShardEventScheduler(4, concurrency=16, mode="sync")
+    assert sync.workers(_compose(2, "m*")) == 1
+
+
+def test_shard_simulated_runs_are_deterministic(movie_small):
+    """Two simulated sharded runs produce identical call logs, walls, and
+    results (Table-9 accounting stays one deterministic event replay)."""
+    table, oracle = movie_small
+    plan = _chain_plan()
+    runs = []
+    for _ in range(2):
+        meter = bk.UsageMeter()
+        res = ex.execute(plan, table, bk.make_backends(oracle),
+                         default_tier="m*", batch_size=8, morsel_size=8,
+                         meter=meter, driver="simulated", shards=4)
+        runs.append((list(meter.call_log), list(meter.call_keys),
+                     res.wall_s, res.scalar))
+    assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# Shard-local cache option
+# ---------------------------------------------------------------------------
+
+def test_shard_local_cache_trades_invariance_for_isolation():
+    """ctx.shard_cache="local": each shard memoizes independently, so
+    cross-shard duplicates bill per shard (more calls than the default
+    shared cache, which is why "shared" is the default)."""
+    oracle = EchoOracle()
+    table = Table({"v": [str(i % 8) for i in range(32)]}, name="dups")
+    plan = P.LogicalPlan((P.Operator(P.MAP, "annotate", "v", "a"),))
+    calls = {}
+    for mode in ("shared", "local"):
+        backend = SleepBackend(oracle, delay_s=0.0)
+        res = ex.execute(plan, table, {"m*": backend}, default_tier="m*",
+                         morsel_size=8, driver="threads", shards=2,
+                         cache=rt.OutputCache(), shard_cache=mode)
+        calls[mode] = backend.calls_made
+        assert res.table.columns["a"] == [f"A:{i % 8}" for i in range(32)]
+    assert calls["shared"] == 8          # one bill per unique value
+    # local: each shard bills its own copy of the 8 unique values once
+    assert calls["local"] == 16
+
+
+# ---------------------------------------------------------------------------
+# Cost model + serve surface
+# ---------------------------------------------------------------------------
+
+def test_shard_cost_model_scales_width_not_calls():
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "keep the good ones", "v"),))
+    c1 = cost_mod.plan_cost(plan, 128, concurrency=4, shards=1)
+    c4 = cost_mod.plan_cost(plan, 128, concurrency=4, shards=4)
+    assert c4.llm_calls == c1.llm_calls      # sharding never changes calls
+    assert c4.usd == pytest.approx(c1.usd)
+    assert c4.latency_s == pytest.approx(c1.latency_s / 4)
+
+
+def test_shard_serve_parser_and_dispatcher_wiring():
+    from repro.launch import serve
+    ap = serve.build_parser()
+    assert ap.parse_args([]).shards == 1
+    assert ap.parse_args(["--shards", "4"]).shards == 4
+    ctx = rt.ExecutionContext(backends={}, shards=3, driver="threads",
+                              per_tier_concurrency={"m*": 7})
+    disp = ctx.make_dispatcher()
+    try:
+        assert isinstance(disp, ShardedDispatcher)
+        assert disp.n_shards == 3 and disp.kind == "threads"
+        assert [disp.shard_of(i) for i in range(5)] == [0, 1, 2, 0, 1]
+        assert [disp.shard_quota("m*", s) for s in range(3)] == [3, 2, 2]
+    finally:
+        disp.close()
+    assert isinstance(rt.ExecutionContext(backends={}).make_dispatcher(),
+                      rt.SimulatedDispatcher)
