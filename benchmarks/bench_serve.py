@@ -1,0 +1,141 @@
+"""Streaming-serve benchmark — the repo's multi-tenant serving
+perf trajectory.
+
+Four filter -> map (-> reduce) queries with distinct instructions run on
+one shared ``launch.query_server.QueryServer`` (threads driver, really-
+sleeping backend) two ways:
+
+* **sequential**: admitted back-to-back — submit, wait, submit — the
+  "batch script" baseline every PR before this one measured;
+* **concurrent**: all four admitted at once, interleaving on the same
+  per-tier worker pools.
+
+Each query deliberately under-fills the 16-wide tier pool solo (8-row
+morsels + a reduce barrier on half the queries), so solo execution
+leaves idle capacity; concurrent admission fills it. Acceptance:
+concurrent admission is >= 1.5x faster than back-to-back at 4 in-flight
+queries, and every query's result is byte-identical to running it solo
+on a fresh context (the admission-order-invariance contract,
+test-enforced in tests/test_serve.py).
+
+Writes ``artifacts/bench/BENCH_serve.json`` (one row per mode) and a
+repo-root ``BENCH_serve.json`` summary for the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import executor as ex
+from repro.core import runtime as rt
+from repro.launch.query_server import QueryServer
+from repro.testing import (KindOracle, SleepBackend, result_fingerprint,
+                           tagged_plan, tagged_table)
+
+from benchmarks import common
+
+N_QUERIES = 4
+ROWS_PER_QUERY = 8
+CONCURRENCY = 16
+ROOT_SUMMARY = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_serve.json")
+
+
+def _specs():
+    """(tag, reduce_tail): distinct instructions per query (see
+    repro.testing.tagged_plan), so sharing the server cache never
+    cross-fills between tenants."""
+    return [(f"q{i}", i % 2 == 1) for i in range(N_QUERIES)]
+
+
+def _table(tag: str):
+    return tagged_table(tag, ROWS_PER_QUERY)
+
+
+_plan = tagged_plan
+_result_key = result_fingerprint
+
+
+def _ctx(sleep_s: float) -> rt.ExecutionContext:
+    backend = SleepBackend(KindOracle(), delay_s=sleep_s)
+    return rt.ExecutionContext(backends={"m*": backend},
+                               default_tier="m*", concurrency=CONCURRENCY,
+                               morsel_size=ROWS_PER_QUERY,
+                               driver="threads")
+
+
+def _serve_once(sleep_s: float, concurrent: bool):
+    """One server run; returns (makespan, per-query result keys, calls)."""
+    with QueryServer(_ctx(sleep_s)) as server:
+        t0 = time.perf_counter()
+        if concurrent:
+            handles = [(tag, server.submit(_plan(tag, tail), _table(tag),
+                                           name=tag))
+                       for tag, tail in _specs()]
+            for _, h in handles:
+                h.result(timeout=60)
+        else:
+            handles = []
+            for tag, tail in _specs():
+                h = server.submit(_plan(tag, tail), _table(tag), name=tag)
+                h.result(timeout=60)
+                handles.append((tag, h))
+        makespan = time.perf_counter() - t0
+        calls = server.ctx.meter.total.calls
+    return makespan, {tag: _result_key(h.result()) for tag, h in handles}, \
+        calls
+
+
+def run(sleep_s: float = 0.05):
+    # solo reference: each query on its own fresh context
+    solo = {}
+    for tag, tail in _specs():
+        res = ex.execute(_plan(tag, tail), _table(tag), _ctx(sleep_s))
+        solo[tag] = _result_key(res)
+
+    rows = []
+    results = {}
+    for mode, concurrent in (("sequential", False), ("concurrent", True)):
+        walls, keys, calls = [], None, None
+        for _ in range(3):          # median of 3: thread scheduling jitter
+            wall, keys, calls = _serve_once(sleep_s, concurrent)
+            walls.append(wall)
+        results[mode] = keys
+        rows.append({"mode": mode, "queries": N_QUERIES, "calls": calls,
+                     "wall_s": round(sorted(walls)[1], 4),
+                     "walls": [round(w, 4) for w in walls]})
+
+    for mode, keys in results.items():
+        if keys != solo:
+            raise AssertionError(
+                f"{mode} serving changed a query's answer vs solo")
+
+    seq = next(r for r in rows if r["mode"] == "sequential")
+    conc = next(r for r in rows if r["mode"] == "concurrent")
+    speedup = seq["wall_s"] / max(conc["wall_s"], 1e-9)
+    summary = {
+        "mode": "summary", "queries": N_QUERIES, "calls": conc["calls"],
+        "sequential_wall_s": seq["wall_s"],
+        "concurrent_wall_s": conc["wall_s"],
+        "serve_speedup_4_inflight": round(speedup, 3),
+        "results_identical_to_solo": True,
+    }
+    rows.append(summary)
+    common.emit("BENCH_serve", rows)
+    with open(ROOT_SUMMARY, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(common.fmt_table(
+        [r for r in rows if r["mode"] != "summary"],
+        ["mode", "queries", "calls", "wall_s"]))
+    print(f"[bench_serve] threads wall {seq['wall_s']:.3f}s (back-to-back)"
+          f" -> {conc['wall_s']:.3f}s (4 in-flight): {speedup:.2f}x "
+          f"speedup, byte-identical results vs solo")
+    if speedup < 1.5:
+        raise AssertionError(
+            f"4-in-flight serve speedup {speedup:.2f}x < 1.5x target")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

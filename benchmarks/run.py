@@ -13,7 +13,8 @@ import time
 import traceback
 
 from benchmarks import common
-from benchmarks import (appendix_d_search, bench_coalesce, bench_shard,
+from benchmarks import (appendix_d_search, bench_coalesce, bench_serve,
+                        bench_shard,
                         fig9_fig10_breakdown,
                         fig13_cardinality, fig14_batch_prompting,
                         roofline_report, table2_capability,
@@ -26,6 +27,8 @@ BENCHES = [
         max_rows=48 if q else 96)),
     ("bench_shard", lambda q: bench_shard.run(
         max_rows=48 if q else 96)),
+    ("bench_serve", lambda q: bench_serve.run(
+        sleep_s=0.03 if q else 0.05)),
     ("table2_capability", lambda q: table2_capability.run(
         n=200 if q else 500)),
     ("table4_runtime_cost", lambda q: table4_runtime_cost.run(

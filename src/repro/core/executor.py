@@ -152,6 +152,27 @@ def _force(value, ready: float) -> Tuple[Table, float]:
     return value, ready
 
 
+def _settle(parts) -> List[Tuple[Table, float]]:
+    """Resolve EVERY morsel task, then surface the first failure (in
+    morsel order). Waiting for all tasks — instead of raising at the
+    first failed one — is what makes the executor's cleanup safe on a
+    shared (server) dispatcher: ``finalize``/``release_query`` must not
+    run while sibling morsels of the same query are still billing, or
+    stragglers would resurrect released routing state and their calls
+    would miss the per-query meter merge."""
+    settled: List[Tuple[Table, float]] = []
+    first_exc: Optional[BaseException] = None
+    for p in parts:
+        try:
+            settled.append(_force(*p.result()))
+        except BaseException as e:
+            if first_exc is None:
+                first_exc = e
+    if first_exc is not None:
+        raise first_exc
+    return settled
+
+
 def execute(plan: plan_ir.LogicalPlan, table: Table,
             backends, *, default_tier: Optional[str] = None,
             concurrency: Optional[int] = None,
@@ -165,7 +186,8 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
             shards: Optional[int] = None,
             shard_cache: Optional[str] = None,
             scheduler: Optional[rt.EventScheduler] = None,
-            dispatcher: Optional[rt.Dispatcher] = None
+            dispatcher: Optional[rt.Dispatcher] = None,
+            query_key=None
             ) -> ExecutionResult:
     """Execute ``plan`` over ``table``.
 
@@ -175,9 +197,19 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
     :class:`runtime.ExecutionContext` (every keyword argument given here
     overrides the matching context field). A caller-supplied ``dispatcher``
     shares its worker pools across executions — the judge overlaps both
-    sample runs on one pool this way — and ``wall_s`` then reports the
-    dispatcher's cumulative makespan. ``scheduler`` is the legacy form of
-    the same: it is wrapped in a :class:`runtime.SimulatedDispatcher`.
+    sample runs on one pool this way, and ``launch.query_server`` admits
+    every query onto one server-lifetime dispatcher — and ``wall_s`` then
+    reports the dispatcher's cumulative makespan. ``scheduler`` is the
+    legacy form of the same: it is wrapped in a
+    :class:`runtime.SimulatedDispatcher`.
+
+    ``query_key`` scopes this execution on a *shared* dispatcher: it
+    prefixes every logical meter key (``(query, op, morsel, ...)``) so
+    concurrently admitted queries' call logs stay disjoint and
+    per-query-sortable, and it gives the execution its own round-robin
+    shard cursor (concurrent queries spread across shards instead of all
+    starting on shard 0). Solo executions leave it ``None`` — their key
+    shapes are unchanged.
     """
     t0 = time.perf_counter()
     over = {k: v for k, v in (("default_tier", default_tier),
@@ -198,15 +230,18 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
         dispatcher = rt.SimulatedDispatcher(scheduler) \
             if scheduler is not None else ctx.make_dispatcher()
     try:
-        return _run(plan, table, ctx, dispatcher, t0)
+        return _run(plan, table, ctx, dispatcher, t0, query_key=query_key)
     finally:
         if owns_dispatcher:
             dispatcher.close()
 
 
 def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
-         disp: rt.Dispatcher, t0: float) -> ExecutionResult:
+         disp: rt.Dispatcher, t0: float, query_key=None) -> ExecutionResult:
     meter = ctx.meter
+    # logical meter-key prefix: () solo, (query_id,) on a shared server —
+    # keys within one execution keep one shape, so per-query merge sorts
+    kp = () if query_key is None else (query_key,)
     table = with_rowids(table)
     # Morsel boundaries do NOT depend on the shard count: a sharded
     # dispatcher only changes *where* each morsel runs (round-robin by
@@ -234,7 +269,8 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
         outs, finish = disp.run_llm(op, values, backend, backend.tier.name,
                                     meter, batch_size=ctx.batch_size,
                                     cache=ctx.cache, ready_s=ready,
-                                    shard=disp.shard_of(idx), key=(oi, idx))
+                                    shard=disp.shard_of(idx, query_key),
+                                    key=kp + (oi, idx))
         with rows_lock:
             rows_processed[0] += len(values)
         return outs, finish
@@ -272,7 +308,7 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                 # against each other (one Python process, even sharded)
                 (out_tbl, _), finish = disp.run_host(
                     lambda: rt.run_udf_op(op, tbl, values), tbl.n_rows,
-                    ready_s=ready, shard=disp.shard_of(idx))
+                    ready_s=ready, shard=disp.shard_of(idx, query_key))
                 return out_tbl, finish
             outs, finish = llm_calls(op, oi, idx, values, ready)
             out_tbl, _ = rt.apply_outputs(op, tbl, outs)
@@ -288,7 +324,7 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
         for oi, op in enumerate(plan.ops):
             if op.kind in (plan_ir.REDUCE, plan_ir.RANK):
                 # pipeline barrier: needs every surviving row
-                tbl, ready = _merge([_force(*p.result()) for p in parts])
+                tbl, ready = _merge(_settle(parts))
                 if op.kind == plan_ir.RANK and tbl.n_rows == 0:
                     parts = [disp.done(tbl, ready)]
                     continue
@@ -317,15 +353,15 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
             if coal is not None and op.udf is None:
                 backend = ctx.backend(op.tier)
                 group = coal.open(op, backend, backend.tier.name,
-                                  expected=len(parts), op_key=oi)
+                                  expected=len(parts), op_key=kp + (oi,))
             parts = [
                 disp.defer(p,
                            lambda value, ready, op=op, oi=oi, group=group,
                            i=i: step(op, oi, group, i, value, ready),
-                           shard=disp.shard_of(i))
+                           shard=disp.shard_of(i, query_key))
                 for i, p in enumerate(parts)]
 
-        out_table, _ = _merge([_force(*p.result()) for p in parts])
+        out_table, _ = _merge(_settle(parts))
     finally:
         if coal is not None:
             # normal exit: a no-op (every group is watermarked and
@@ -333,8 +369,12 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
             # tasks unwind before the dispatcher's pool shutdown.
             coal.close()
         # sharded dispatch: merge per-shard staging meters into ctx.meter
-        # (deterministic combined call log); no-op on single-host drivers
+        # (deterministic combined call log); no-op on single-host drivers.
+        # finalize is per-execution, not terminal — a shared dispatcher
+        # keeps serving other in-flight queries' staging untouched.
         disp.finalize(meter)
+        if query_key is not None:
+            disp.release_query(query_key)
     return ExecutionResult(
         table=None if is_reduce else out_table,
         scalar=scalar, meter=meter, wall_s=disp.wall_s,

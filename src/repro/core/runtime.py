@@ -53,6 +53,15 @@ Four pieces:
   call counts, and per-tier totals are shard-count invariant; only batch
   *execution* round-robins across the (shard, tier) pools.
 
+  Above everything sits ``launch.query_server.QueryServer``: ONE
+  long-lived dispatcher (``ExecutionContext.dispatcher()``) serves
+  continuously admitted queries, each executed with a ``query_key`` that
+  scopes its logical meter keys and shard cursor — so per-query meters
+  finalize independently while ``per_tier_concurrency`` caps act as
+  serving quotas across tenants. ``ExecutionContext.close()`` is the
+  matching shutdown path (release pools; the cache's creator closes the
+  cache — ``OutputCache.close`` releases its in-flight reservations).
+
 * :class:`BatchCoalescer` — cross-morsel batch packing. With
   ``batch_size > 1`` a selective upstream filter emits ragged morsels
   whose remainder rows each burn a full batch slot downstream
@@ -125,6 +134,12 @@ class EventScheduler:
     finish observed so far. ``barrier()`` forbids later jobs from starting
     before everything already submitted has finished (the physical
     optimizer uses it between dependent sample-flow stages).
+
+    ``submit``/``barrier`` are lock-protected: a long-lived server admits
+    queries from concurrent threads, and under the simulated driver they
+    all replay onto one shared scheduler — placement must not corrupt the
+    pool heaps (the *interleaving* of concurrently admitted queries is
+    still arrival-dependent; only solo replays are fully deterministic).
     """
 
     def __init__(self, concurrency: int = 16,
@@ -139,6 +154,7 @@ class EventScheduler:
         self._makespan = 0.0
         self._floor = 0.0
         self.n_jobs = 0
+        self._elock = threading.Lock()
 
     def workers(self, tier: str) -> int:
         if self.mode == "sync" or tier == HOST_TIER:
@@ -159,20 +175,22 @@ class EventScheduler:
     def submit(self, tier: str, duration_s: float,
                ready_s: float = 0.0) -> float:
         """Schedule one job; returns its finish time."""
-        pool = self._pool(tier)
-        free = heapq.heappop(pool)
-        start = max(free, ready_s, self._floor)
-        finish = start + max(0.0, duration_s)
-        heapq.heappush(pool, finish)
-        self.n_jobs += 1
-        if finish > self._makespan:
-            self._makespan = finish
-        return finish
+        with self._elock:
+            pool = self._pool(tier)
+            free = heapq.heappop(pool)
+            start = max(free, ready_s, self._floor)
+            finish = start + max(0.0, duration_s)
+            heapq.heappush(pool, finish)
+            self.n_jobs += 1
+            if finish > self._makespan:
+                self._makespan = finish
+            return finish
 
     def barrier(self) -> float:
         """All later jobs start no earlier than the current makespan."""
-        self._floor = self._makespan
-        return self._floor
+        with self._elock:
+            self._floor = self._makespan
+            return self._floor
 
     def drain(self, meter: bk.UsageMeter, cursor: int,
               ready_s: float = 0.0) -> Tuple[int, float]:
@@ -219,6 +237,7 @@ class OutputCache:
         self.data: Dict[tuple, Any] = {}
         self.hits = 0
         self.misses = 0
+        self.closed = False
         self._lock = threading.Lock()
         # key -> (owner token, event set when the owner publishes/releases)
         self._pending: Dict[tuple, Tuple[object, threading.Event]] = {}
@@ -244,7 +263,11 @@ class OutputCache:
                     self.hits += 1      # a sequential run would hit here
                     out.append(("wait", pend[1]))
                     continue
-                if pend is None:
+                if pend is None and not self.closed:
+                    # closed caches stop single-flighting: no reservation
+                    # is created after close(), so a draining server can
+                    # never re-grow waiters it just released (stragglers
+                    # compute solo instead of parking on a dead owner)
                     self._pending[k] = (token, threading.Event())
                 self.misses += 1
                 out.append(("own", None))
@@ -291,6 +314,22 @@ class OutputCache:
             if k in self.data:
                 return True, self.data[k]
         return False, None
+
+    def close(self) -> None:
+        """Terminal, idempotent shutdown — the cache's *creator* calls
+        this once nothing should be waiting anymore: every in-flight
+        reservation is released (threads blocked in ``wait_value`` on an
+        owner that will never publish unblock and recompute solo) and no
+        NEW reservation is ever created, so a draining server cannot
+        re-grow waiters it just released. Published data stays readable,
+        but single-flight dedupe is off from here on — do not close a
+        cache other live contexts still execute against."""
+        with self._lock:
+            pending = list(self._pending.values())
+            self._pending.clear()
+            self.closed = True
+        for _, event in pending:
+            event.set()
 
 
 def run_backend_calls(op: plan_ir.Operator, values: Sequence[Any], backend,
@@ -550,10 +589,18 @@ class Dispatcher:
     kind = "abstract"
     n_shards = 1
 
-    def shard_of(self, morsel_idx: int) -> int:
+    def shard_of(self, morsel_idx: int, query=None) -> int:
         """Which shard owns morsel ``morsel_idx`` (round-robin when
-        sharded; always 0 on single-host dispatchers)."""
+        sharded; always 0 on single-host dispatchers). ``query`` is the
+        admitting query's id on a shared server — a sharded dispatcher
+        offsets each query's round-robin cursor so concurrently admitted
+        queries spread across shards instead of all starting on shard 0."""
         return 0
+
+    def release_query(self, query) -> None:
+        """Drop per-query routing state (the round-robin cursor offset);
+        the executor calls this once per keyed execution. No-op on
+        single-host dispatchers."""
 
     def meter_for(self, meter: bk.UsageMeter, shard: int) -> bk.UsageMeter:
         """The meter a call on ``shard`` should bill into (a per-shard
@@ -681,8 +728,20 @@ class ThreadPoolDispatcher(Dispatcher):
 
         def fan(thunks):
             futs = [pool.submit(t) for t in thunks]
-            res = [f.result() for f in futs]
+            # settle EVERY thunk before surfacing the first failure: a
+            # caller's cleanup (per-query meter finalize on a shared
+            # dispatcher) must not run while sibling chunks of the same
+            # call are still billing
+            res, first = [], None
+            for f in futs:
+                try:
+                    res.append(f.result())
+                except BaseException as e:
+                    if first is None:
+                        first = e
             self._touch()
+            if first is not None:
+                raise first
             return res
 
         return fan
@@ -805,7 +864,7 @@ class _OpGroup:
     formation ordinal)."""
 
     def __init__(self, coal: "BatchCoalescer", op, backend, tier_name: str,
-                 expected: int, op_key: Optional[int] = None):
+                 expected: int, op_key: Optional[tuple] = None):
         self.coal = coal
         self.op = op
         self.backend = backend
@@ -936,7 +995,8 @@ class _OpGroup:
             t.join()
 
     def _run_batch(self, b: _Batch) -> None:
-        key = None if self.op_key is None else (self.op_key, b.seq)
+        key = None if self.op_key is None \
+            else tuple(self.op_key) + (b.seq,)
         try:
             outs, finish = self.coal.disp.run_llm(
                 self.op, [s.value for s in b.slots], self.backend,
@@ -1023,6 +1083,17 @@ class _LingerTicker:
         with self._lock:
             self._coals.pop(id(coal), None)
 
+    def stop(self, timeout: float = 2.0) -> None:
+        """Deterministic shutdown for long-lived processes: drop every
+        registration and join the daemon (it parks, sees the empty
+        registry, and exits). Idempotent; a later ``register`` simply
+        starts a fresh daemon."""
+        with self._lock:
+            self._coals.clear()
+            thread = self._thread
+        if thread is not None and thread.is_alive():
+            thread.join(timeout)
+
     def n_threads(self) -> int:
         """Live ticker threads (for tests: must never exceed 1)."""
         return sum(1 for t in threading.enumerate()
@@ -1078,10 +1149,14 @@ class BatchCoalescer:
         self._ticking = False
 
     def open(self, op, backend, tier_name: str, expected: int,
-             op_key: Optional[int] = None) -> _OpGroup:
+             op_key: Optional[tuple] = None) -> _OpGroup:
+        """Register one operator's accumulation group. ``op_key`` is the
+        group's logical meter-key prefix — ``(op_index,)`` solo, or
+        ``(query_id, op_index)`` under a query server, so concurrently
+        admitted queries' batch calls never collide in a merged log."""
         with self._lock:
             if op_key is None:
-                op_key = len(self._groups)
+                op_key = (len(self._groups),)
             g = _OpGroup(self, op, backend, tier_name, expected,
                          op_key=op_key)
             self._groups.append(g)
@@ -1178,6 +1253,16 @@ class ExecutionContext:
     shard_cache: str = "shared"
     cache: Optional[OutputCache] = None
     meter: bk.UsageMeter = dataclasses.field(default_factory=bk.UsageMeter)
+    # long-lived dispatcher owned by this context (see dispatcher()/close();
+    # init=False fields are NOT carried across fork(), so every fork starts
+    # unopened and close() releases only what this context created)
+    _disp: Optional[Dispatcher] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
+    _closed: bool = dataclasses.field(
+        default=False, init=False, repr=False, compare=False)
+    _dlock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, init=False, repr=False,
+        compare=False)
 
     def backend(self, tier_name: Optional[str]):
         return self.backends[tier_name or self.default_tier]
@@ -1205,9 +1290,47 @@ class ExecutionContext:
                                         mode=self.mode)
         return SimulatedDispatcher(self.make_scheduler())
 
+    def dispatcher(self) -> Dispatcher:
+        """The context's **long-lived** dispatcher: created on first use,
+        reused across executions (pass it to ``executor.execute(...,
+        dispatcher=...)``), released by :meth:`close`. This is the serving
+        entry point — ``make_dispatcher()`` still builds a fresh throwaway
+        dispatcher per call for one-shot executions."""
+        with self._dlock:
+            if self._closed:
+                raise RuntimeError("ExecutionContext is closed")
+            if self._disp is None:
+                self._disp = self.make_dispatcher()
+            return self._disp
+
+    def close(self) -> None:
+        """Idempotent shutdown for long-lived use: release the context's
+        dispatcher (tier/chain/shard pools). The cache is deliberately
+        NOT closed here — ``cache`` may be shared with sibling contexts
+        (forks, a judge's sample runs) that are still executing; whoever
+        *created* the cache closes it (``OutputCache.close``), which is
+        what ``launch.query_server.QueryServer`` does for the serving
+        cache it builds. Safe to call twice; a context-manager
+        ``with ExecutionContext(...) as ctx:`` calls it on exit."""
+        with self._dlock:
+            if self._closed:
+                return
+            self._closed = True
+            disp, self._disp = self._disp, None
+        if disp is not None:
+            disp.close()
+
+    def __enter__(self) -> "ExecutionContext":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     def fork(self, **overrides) -> "ExecutionContext":
         """A sibling context; e.g. ``fork(meter=UsageMeter())`` gives an
-        optimizer its own accounting while sharing backends and cache."""
+        optimizer its own accounting while sharing backends and cache.
+        Forks never share the parent's long-lived dispatcher (``_disp``
+        is ``init=False``) — each fork opens and closes its own."""
         return dataclasses.replace(self, **overrides)
 
 

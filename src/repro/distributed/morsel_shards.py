@@ -184,6 +184,12 @@ class ShardedDispatcher(rt.Dispatcher):
         self.shared_cache = bool(shared_cache)
         self._lock = threading.Lock()
         self._local_caches: Dict[int, rt.OutputCache] = {}
+        # per-query round-robin cursor offsets: concurrently admitted
+        # queries each rotate their morsel->shard mapping by their own
+        # base, so a multi-tenant server spreads queries across shards
+        # instead of every query starting on shard 0
+        self._query_base: Dict[object, int] = {}
+        self._next_base = 0
         # target-meter id -> (target ref, per-shard staging meters)
         self._staging: Dict[int, Tuple[bk.UsageMeter,
                                        List[bk.UsageMeter]]] = {}
@@ -207,8 +213,25 @@ class ShardedDispatcher(rt.Dispatcher):
                 for s in range(self.n_shards)]
 
     # -- shard routing ---------------------------------------------------
-    def shard_of(self, morsel_idx: int) -> int:
-        return morsel_idx % self.n_shards
+    def shard_of(self, morsel_idx: int, query=None) -> int:
+        """Round-robin by morsel index; a ``query`` id adds the query's
+        own cursor offset (assigned round-robin at first sight). The
+        offset only rotates *placement* — results, call counts, and
+        meter totals are placement-invariant, so per-query offsets keep
+        the shard-count-invariance contract intact."""
+        if query is None or self.n_shards == 1:
+            return morsel_idx % self.n_shards
+        with self._lock:
+            base = self._query_base.get(query)
+            if base is None:
+                base = self._next_base % self.n_shards
+                self._query_base[query] = base
+                self._next_base += 1
+        return (morsel_idx + base) % self.n_shards
+
+    def release_query(self, query) -> None:
+        with self._lock:
+            self._query_base.pop(query, None)
 
     def shard_quota(self, tier: str, shard: int) -> int:
         """The (shard, tier) pool width actually in force."""

@@ -1,0 +1,260 @@
+"""Streaming semantic serve: continuous query admission onto one shared
+sharded dispatcher.
+
+``executor.execute`` runs one query and tears its worker pools down; a
+:class:`QueryServer` is the long-lived form — the analytics-level analog
+of continuous batching at the token level (``engine.ContinuousBatcher``
+fills decode slots across requests; the server fills **dispatcher
+capacity** across queries). One server owns
+
+* ONE :class:`runtime.ExecutionContext` — shared backends, one shared
+  single-flight ``OutputCache`` (cross-query duplicate values bill once),
+  and the server-lifetime ``UsageMeter`` that accumulates every admitted
+  query's spend;
+* ONE long-lived dispatcher (``ctx.dispatcher()``) — under
+  ``driver="threads"`` the per-tier worker pools (or, with
+  ``ctx.shards > 1``, the pool-per-(shard, tier) grid of the
+  ``ShardedDispatcher``) persist across queries, so
+  ``per_tier_concurrency`` caps act as true serving quotas **across
+  tenants**: two in-flight queries' calls against one tier queue on the
+  same bounded pool.
+
+``submit(plan, table)`` admits a query from any caller thread and
+returns a :class:`QueryHandle` immediately; the query's morsel stream is
+fed into the shared dispatcher, interleaving with every other in-flight
+query. Each handle carries its own per-query ``UsageMeter`` (finalized
+independently via the dispatcher's per-execution staging merge) and its
+own **measured** latency/exec wall; the server context's meter absorbs
+each query's totals as it finishes, so ``server.ctx.meter`` is the
+server-lifetime bill.
+
+Isolation contract (test-enforced in ``tests/test_serve.py``):
+
+* admission-order invariance — a query's results and per-query meter
+  totals are byte-identical to running it solo on a fresh context
+  (concurrent tenants only change *when* calls run, never what they
+  answer or bill; shared-cache hits across queries require overlapping
+  cache keys, which distinct instructions never produce);
+* failure isolation — a backend failure inside one query poisons only
+  that query's handle; other in-flight queries and later submissions
+  are unaffected.
+
+Per-query state that used to be per-process: the coalescer (one
+``BatchCoalescer`` per execution, so one query's linger watermark cannot
+stall another's), the sharded round-robin cursor (``shard_of(query=)``
+offsets each query), and meter staging (keyed by the query's own meter
+object, merged per-execution by ``disp.finalize``). The logical meter
+keys are prefixed with the query id (``execute(query_key=...)``), so
+every query's call log is internally sorted and disjoint from its
+neighbours'.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutureTimeout
+from typing import Any, Dict, Optional
+
+from repro.core import backends as bk
+from repro.core import executor as ex
+from repro.core import plan as plan_ir
+from repro.core import runtime as rt
+from repro.core.table import Table
+
+
+class QueryHandle:
+    """One admitted query: its future result, per-query meter, and
+    measured timings. ``latency_s`` counts from admission (queueing
+    included); ``exec_wall_s`` counts from the moment execution started
+    on the shared dispatcher."""
+
+    def __init__(self, qid: int, name: str):
+        self.qid = qid
+        self.name = name
+        self.meter = bk.UsageMeter()
+        self.submitted_s = time.perf_counter()
+        self.started_s: Optional[float] = None
+        self.finished_s: Optional[float] = None
+        self._fut: Future = Future()
+
+    def result(self, timeout: Optional[float] = None) -> ex.ExecutionResult:
+        """Block for the query's :class:`executor.ExecutionResult`;
+        re-raises the query's own failure (and only its own)."""
+        return self._fut.result(timeout)
+
+    def done(self) -> bool:
+        return self._fut.done()
+
+    def failed(self) -> bool:
+        return self._fut.done() and self._fut.exception() is not None
+
+    @property
+    def latency_s(self) -> float:
+        """Admission-to-completion measured wall (includes queue wait)."""
+        if self.finished_s is None:
+            return 0.0
+        return self.finished_s - self.submitted_s
+
+    @property
+    def exec_wall_s(self) -> float:
+        """Execution-start-to-completion measured wall for THIS query
+        (the shared dispatcher's ``wall_s`` is server-cumulative)."""
+        if self.finished_s is None or self.started_s is None:
+            return 0.0
+        return self.finished_s - self.started_s
+
+
+class QueryServer:
+    """Long-lived semantic query server over one shared dispatcher.
+
+    ::
+
+        ctx = rt.ExecutionContext(backends=..., driver="threads",
+                                  shards=2, concurrency=8)
+        with QueryServer(ctx) as server:
+            h1 = server.submit(plan1, table1)
+            h2 = server.submit(plan2, table2)     # interleaves with h1
+            res1, res2 = h1.result(), h2.result()
+
+    ``max_inflight`` bounds how many admitted queries execute at once
+    (later submissions queue in admission order); backend-call
+    parallelism *within* each query is still governed by the context's
+    ``concurrency`` / ``per_tier_concurrency`` / ``shards`` knobs.
+    ``close()`` drains in-flight queries, then releases the dispatcher's
+    pools and the cache's in-flight reservations (idempotent; also the
+    context-manager exit)."""
+
+    def __init__(self, ctx_or_backends, *, max_inflight: int = 8,
+                 **ctx_overrides):
+        ctx = rt.as_context(ctx_or_backends, **ctx_overrides)
+        self._owns_cache = ctx.cache is None
+        if self._owns_cache:
+            # the serving default: one shared single-flight cache, so
+            # repeated values across queries bill once, server-lifetime
+            ctx = ctx.fork(cache=rt.OutputCache())
+        self.ctx = ctx
+        self._disp = ctx.dispatcher()
+        self._pool = ThreadPoolExecutor(max_workers=max(1, max_inflight),
+                                        thread_name_prefix="query-admit")
+        self._lock = threading.Lock()
+        self._seq = 0
+        # only in-flight handles are retained (a long-lived server must
+        # not pin every finished query's result table + call log forever);
+        # completed/failed queries survive as counters, and the caller
+        # keeps the handle it got from submit()
+        self._inflight: Dict[int, QueryHandle] = {}
+        self._completed = 0
+        self._failed = 0
+        self._closed = False
+
+    # -- admission -------------------------------------------------------
+    def submit(self, plan: plan_ir.LogicalPlan, table: Table,
+               name: Optional[str] = None) -> QueryHandle:
+        """Admit one query (thread-safe, non-blocking): returns a
+        :class:`QueryHandle` whose execution interleaves with every
+        other in-flight query on the shared dispatcher."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("QueryServer is closed")
+            qid = self._seq
+            self._seq += 1
+            handle = QueryHandle(qid, name or f"q{qid}")
+            self._inflight[qid] = handle
+        self._pool.submit(self._run_query, handle, plan, table)
+        return handle
+
+    def _run_query(self, handle: QueryHandle, plan: plan_ir.LogicalPlan,
+                   table: Table) -> None:
+        handle.started_s = time.perf_counter()
+        qctx = self.ctx.fork(meter=handle.meter)
+        try:
+            res = ex.execute(plan, table, qctx, dispatcher=self._disp,
+                             query_key=handle.qid)
+        except BaseException as e:
+            handle.finished_s = time.perf_counter()
+            # failed queries still billed whatever ran before the error
+            self.ctx.meter.absorb(handle.meter)
+            handle._fut.set_exception(e)
+            self._retire(handle, failed=True)
+        else:
+            handle.finished_s = time.perf_counter()
+            self.ctx.meter.absorb(handle.meter)
+            handle._fut.set_result(res)
+            self._retire(handle, failed=False)
+
+    def _retire(self, handle: QueryHandle, failed: bool) -> None:
+        with self._lock:
+            self._inflight.pop(handle.qid, None)
+            if failed:
+                self._failed += 1
+            else:
+                self._completed += 1
+
+    # -- lifecycle -------------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Wait for every admitted query (including ones admitted while
+        draining) to finish. Failures do not raise here — read them
+        per-handle."""
+        deadline = None if timeout is None \
+            else time.perf_counter() + timeout
+        while True:
+            with self._lock:
+                # checking emptiness under the admission lock makes this
+                # drain's linearization point race-free: a submit either
+                # registered its handle before the check (and is waited
+                # on) or is ordered after the drain
+                pending = list(self._inflight.values())
+                if not pending:
+                    return
+            left = None if deadline is None \
+                else max(0.0, deadline - time.perf_counter())
+            waitable = [h for h in pending if not h.done()]
+            if not waitable:
+                time.sleep(0.001)   # resolved, retirement imminent
+                continue
+            try:
+                waitable[0]._fut.exception(left)
+            except (_FutureTimeout, TimeoutError):
+                raise TimeoutError(
+                    f"{len(pending)} queries still in flight") from None
+
+    def close(self) -> None:
+        """Drain, then release the shared dispatcher's pools — and, when
+        the server created its own cache, that cache's reservations (a
+        caller-supplied cache is left alone: other contexts may still be
+        executing against it). Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self.drain()
+        self._pool.shutdown(wait=True)
+        self.ctx.close()
+        if self._owns_cache and self.ctx.cache is not None:
+            self.ctx.cache.close()
+
+    def __enter__(self) -> "QueryServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- reporting -------------------------------------------------------
+    @property
+    def wall_s(self) -> float:
+        """Server-lifetime wall (the shared dispatcher's clock)."""
+        return self._disp.wall_s
+
+    def stats(self) -> dict:
+        total: Any = self.ctx.meter.total
+        with self._lock:
+            return {
+                "admitted": self._seq,
+                "completed": self._completed,
+                "failed": self._failed,
+                "inflight": len(self._inflight),
+                "calls": total.calls,
+                "usd": total.usd,
+                "wall_s": self.wall_s,
+            }

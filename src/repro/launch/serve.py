@@ -1,34 +1,50 @@
-"""Serving launcher — continuous-batching generation over a zoo model.
+"""Serving launcher — three modes over one zoo engine. Full knob
+reference with semantics and quickstarts: ``docs/SERVING.md``.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-        --requests 16 --slots 4 --max-new 24
+**Token serving** (default; no ``--semantic``): continuous-batching
+generation over a zoo model — reports throughput, slot occupancy, and
+per-request latency percentiles. Full-size configs are proven via
+launch/dryrun.py (decode cells lower the same decode_step this engine
+drives)::
 
-Reports throughput, slot occupancy, and per-request latency percentiles.
-Full-size configs are proven via launch/dryrun.py (decode cells lower the
-same decode_step this engine drives).
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \\
+        --reduced --requests 16 --slots 4 --max-new 24
 
-``--semantic <dataset>`` serves a semantic-analytics workload instead: the
-named dataset's first query runs through the execution runtime
+**One semantic query** (``--semantic <dataset>``): the named dataset's
+first workload query runs through the execution runtime
 (``core.runtime.ExecutionContext`` + morsel-pipelined executor) with the
-default tier backed by THIS engine (oracle-echo mode). With the default
-``--driver threads`` the morsels genuinely overlap on the engine's slots
-and the reported wall is *measured*; the metered per-call latencies are
-additionally replayed through an ``EventScheduler`` so the report shows
-measured vs simulated wall side by side (``--driver simulated`` runs the
-deterministic event-model path instead):
+default tier backed by THIS engine (oracle-echo mode); the report shows
+measured vs event-replay simulated wall side by side::
 
     PYTHONPATH=src python -m repro.launch.serve --semantic movie --slots 4
 
-With ``--batch N`` (batch prompting) the runtime's ``BatchCoalescer``
-packs batch slots across morsel boundaries; ``--linger S`` bounds how
-long a partial batch may wait for more rows (the analytics-level
-counterpart of the ContinuousBatcher's slot-fill policy), and
-``--no-coalesce`` restores per-morsel batching.
+**Streaming semantic serve** (``--semantic <dataset> --serve N``): a
+long-lived ``launch.query_server.QueryServer`` admits N workload queries
+onto ONE shared dispatcher — queries interleave on the same worker
+pools (continuous batching at the *analytics* level) — and the report
+shows per-query latency percentiles plus concurrent makespan vs the
+back-to-back sequential estimate::
 
-``--shards N`` runs the morsel stream through the sharded dispatcher
-(``distributed.morsel_shards``): morsels round-robin across N shard
-workers, each with its own pool-per-(shard, tier); results, call counts,
-and meter totals are identical to ``--shards 1``.
+    PYTHONPATH=src python -m repro.launch.serve --semantic movie \\
+        --serve 4 --stagger 0.2 --slots 4
+
+Execution knobs (one line each; all apply to ``--semantic`` modes):
+
+* ``--driver {threads,simulated}`` — how backend calls run: real per-tier
+  worker pools with *measured* wall (default), or inline execution with
+  a deterministic event-model wall (Table-9 accounting).
+* ``--batch N`` — batch prompting: N records share one LLM call.
+* ``--coalesce / --no-coalesce`` — pack batch slots across morsel
+  boundaries via ``runtime.BatchCoalescer`` (default on; only active
+  with ``--batch`` > 1).
+* ``--linger S`` — max seconds a partial coalesced batch waits for more
+  rows before flushing (default: flush only on morsel watermarks) — the
+  analytics-level counterpart of the ContinuousBatcher slot-fill policy.
+* ``--shards N`` — morsel-parallel shard workers, pool-per-(shard, tier)
+  dispatch; results/calls/meters identical to ``--shards 1``.
+* ``--serve N`` — admit N workload queries onto one shared QueryServer
+  (0 = off); ``--stagger S`` Poisson-ish mean inter-admission gap in
+  seconds (seeded, explicit offsets; 0 = admit all at once).
 """
 from __future__ import annotations
 
@@ -51,14 +67,14 @@ DEMO_PROMPTS = [
 ]
 
 
-def serve_semantic(args):
-    """Semantic-analytics serving: a workload query executed through the
-    event-driven runtime, default tier backed by the real engine."""
+def _semantic_context(args):
+    """Build the engine-backed ExecutionContext both semantic modes use:
+    the default tier (m1) is served by THIS engine in oracle-echo mode,
+    the other tiers stay simulated."""
     from repro.core import backends as bk
-    from repro.core import executor as ex
     from repro.core import runtime as rt
     from repro.core.cost import DEFAULT_TIERS
-    from repro.data import WORKLOADS, load_dataset
+    from repro.data import load_dataset
     from repro.engine.jax_backend import JAXBackend
 
     table, oracle = load_dataset(args.semantic, max_rows=args.requests * 4)
@@ -79,6 +95,19 @@ def serve_semantic(args):
                               coalesce=args.coalesce,
                               linger_s=args.linger,
                               shards=args.shards)
+    return table, cfg, engine, ctx
+
+
+def serve_semantic(args):
+    """Semantic-analytics serving: a workload query executed through the
+    event-driven runtime, default tier backed by the real engine."""
+    from repro.core import executor as ex
+    from repro.core import runtime as rt
+    from repro.data import WORKLOADS
+
+    table, cfg, engine, ctx = _semantic_context(args)
+    if args.serve > 0:
+        return serve_queries(args, table, cfg, engine, ctx)
     q = WORKLOADS[args.semantic][0]
     print(f"[serve] semantic query {q.qid} over {table.name} "
           f"({table.n_rows} rows), m1 = {cfg.name} on {args.slots} slots, "
@@ -103,6 +132,70 @@ def serve_semantic(args):
     print(f"[serve] engine stats={engine.stats} "
           f"occupancy={engine.occupancy:.2f}")
     return res
+
+
+def stagger_offsets(n: int, mean_s: float, seed: int = 0):
+    """Deterministic Poisson-ish admission offsets: cumulative seeded
+    exponential inter-arrival gaps with mean ``mean_s`` (all zeros when
+    ``mean_s`` is 0 — admit everything at once). Explicit offsets, not a
+    live random process, so a serve run is reproducible."""
+    import random
+    rng = random.Random(seed)
+    offsets, t = [], 0.0
+    for _ in range(max(0, n)):
+        offsets.append(t)
+        if mean_s > 0:
+            t += rng.expovariate(1.0 / mean_s)
+    return offsets
+
+
+def serve_queries(args, table, cfg, engine, ctx):
+    """Streaming semantic serve: admit ``--serve N`` workload queries
+    (staggered by ``--stagger``) onto one shared QueryServer and report
+    per-query latency percentiles + makespan vs sequential estimate."""
+    from repro.data import WORKLOADS
+    from repro.launch.query_server import QueryServer
+
+    queries = [WORKLOADS[args.semantic][i % len(WORKLOADS[args.semantic])]
+               for i in range(args.serve)]
+    offsets = stagger_offsets(len(queries), args.stagger, seed=args.seed)
+    print(f"[serve] streaming {len(queries)} queries over {table.name} "
+          f"({table.n_rows} rows), m1 = {cfg.name} on {args.slots} slots, "
+          f"driver={args.driver} shards={args.shards} batch={args.batch} "
+          f"stagger={args.stagger}s")
+    handles = []
+    with QueryServer(ctx) as server:
+        t0 = time.perf_counter()
+        for q, off in zip(queries, offsets):
+            lead = off - (time.perf_counter() - t0)
+            if lead > 0:
+                time.sleep(lead)
+            handles.append(server.submit(q.plan_for(table), table,
+                                         name=q.qid))
+        server.drain()
+        makespan = time.perf_counter() - t0
+        stats = server.stats()
+    lats = sorted(h.latency_s for h in handles)
+    # per-query exec walls are measured UNDER co-tenant contention, so
+    # their sum is only an upper bound on back-to-back execution — a
+    # measured sequential baseline lives in benchmarks/bench_serve.py
+    seq_bound = sum(h.exec_wall_s for h in handles)
+    for h in handles:
+        res = "FAILED" if h.failed() else \
+            repr(h.result().value())[:60]
+        print(f"  [{h.name}] latency={h.latency_s:.2f}s "
+              f"exec={h.exec_wall_s:.2f}s calls={h.meter.total.calls} "
+              f"-> {res}")
+    p = np.percentile
+    print(f"[serve] makespan={makespan:.2f}s  sum-of-exec-walls="
+          f"{seq_bound:.2f}s  overlap<={seq_bound / max(makespan, 1e-9):.2f}x"
+          f" (upper bound; measured baseline: benchmarks/bench_serve.py)")
+    print(f"[serve] latency p50={p(lats, 50):.2f}s p95={p(lats, 95):.2f}s "
+          f"max={lats[-1]:.2f}s")
+    print(f"[serve] server stats={stats}")
+    print(f"[serve] engine stats={engine.stats} "
+          f"occupancy={engine.occupancy:.2f}")
+    return handles
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -140,6 +233,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="--semantic: max seconds a partial coalesced "
                          "batch waits for more rows before flushing "
                          "(default: flush only on morsel watermarks)")
+    ap.add_argument("--serve", type=int, default=0,
+                    help="--semantic: admit N workload queries onto one "
+                         "long-lived QueryServer (shared dispatcher, "
+                         "per-query meters + latency percentiles); "
+                         "0 = execute the first query once and exit")
+    ap.add_argument("--stagger", type=float, default=0.0,
+                    help="--serve: Poisson-ish mean inter-admission gap "
+                         "in seconds (seeded explicit offsets; 0 = admit "
+                         "all queries at once)")
     return ap
 
 

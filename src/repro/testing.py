@@ -37,6 +37,50 @@ class ConstOracle:
         return len(list(values))
 
 
+class KindOracle:
+    """Kind-aware deterministic oracle for multi-operator pipelines:
+    filters pass every row, maps echo the value, reduces count — so
+    filter -> map -> reduce chains produce assertable outputs."""
+
+    def answer(self, op, value):
+        return True if op.kind == plan_ir.FILTER else f"A:{value}"
+
+    def answer_reduce(self, op, values):
+        return len(list(values))
+
+
+def tagged_table(tag: str, n: int = 32):
+    """A one-column table whose values are tagged (``tag-i``) — paired
+    with :func:`tagged_plan` so distinct tags never share cache keys."""
+    from repro.core.table import Table
+    return Table({"v": [f"{tag}-{i}" for i in range(n)]}, name=tag)
+
+
+def tagged_plan(tag: str, reduce_tail: bool = False) -> plan_ir.LogicalPlan:
+    """filter -> map (-> reduce) over :func:`tagged_table`, with the tag
+    baked into every instruction: queries built from different tags
+    never overlap on ``OutputCache`` keys, so their billing is
+    independent of co-tenants on a shared server — the property the
+    serve suite's solo-identity assertions and ``bench_serve`` rely on."""
+    ops = [
+        plan_ir.Operator(plan_ir.FILTER, f"keep-{tag}", "v"),
+        plan_ir.Operator(plan_ir.MAP, f"annotate-{tag}", "v", "a"),
+    ]
+    if reduce_tail:
+        ops.append(plan_ir.Operator(plan_ir.REDUCE, f"count-{tag}", "v"))
+    return plan_ir.LogicalPlan(tuple(ops))
+
+
+def result_fingerprint(res):
+    """Canonical byte-comparable key for an ExecutionResult of a
+    :func:`tagged_plan` run (reduce scalar, or rowids + mapped column)."""
+    from repro.core import executor as ex
+    if res.is_reduce:
+        return ("reduce", res.scalar)
+    return ("table", tuple(res.table.columns[ex.ROWID]),
+            tuple(map(str, res.table.columns["a"])))
+
+
 class SleepBackend:
     """Always-correct fake backend whose calls *really* sleep.
 
