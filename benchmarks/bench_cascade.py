@@ -1,0 +1,186 @@
+"""Tier-0 embedding cascade benchmark — LLM-call reduction at matched
+accuracy on a filter-heavy plan.
+
+A three-filter conjunctive plan (the cascade's target shape: SEM_FILTER
+dominates, the LLM is the bottleneck) runs twice over the same table and
+capability-simulated backends at ``violation_rate=0``:
+
+* **no-cascade**: every surviving row reaches the LLM tier through the
+  coalescer — the baseline every PR before this one measured;
+* **cascade**: one batched Pallas pass scores each morsel against the
+  predicate anchor; confident rows resolve on-device and only the
+  uncertain band escalates. Bands come from
+  ``testing.EmbeddingOracle.bands_for`` (placed off the backend's
+  effective batch capability), so every on-device resolution targets a
+  record the LLM tier would have answered identically — the two runs
+  return byte-identical tables.
+
+Acceptance (raises AssertionError otherwise):
+
+* final results byte-identical between cascade and no-cascade;
+* >= 5x fewer LLM calls (``tier0-embed`` excluded) with the cascade;
+* cascade results + per-tier meter totals byte-identical across
+  drivers {simulated, threads} x shards {1, 2, 4}.
+
+Writes ``artifacts/bench/BENCH_cascade.json`` (one row per mode) and a
+repo-root ``BENCH_cascade.json`` summary for the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import backends as bk
+from repro.core import cascade as casc
+from repro.core import cost as cost_mod
+from repro.core import executor as ex
+from repro.core import plan as plan_ir
+from repro.core import runtime as rt
+from repro.core.table import Table
+from repro.testing import EmbeddingOracle
+
+from benchmarks import common
+
+BATCH = 8
+MORSEL = 32
+ROOT_SUMMARY = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_cascade.json")
+
+
+class _SelOracle:
+    """Deterministic ~55%-selective filter truths (same recipe as the
+    cascade test suite, so bench and tests exercise one band geometry)."""
+
+    def answer(self, op, value):
+        if op.kind == plan_ir.FILTER:
+            return bk._unit_hash("truth", op.instruction, value) < 0.55
+        return f"A:{value}"
+
+    def answer_reduce(self, op, values):
+        return len(list(values))
+
+
+def _workload(n_rows: int):
+    table = Table({"v": [f"bench-row-{i:04d}" for i in range(n_rows)]},
+                  name="bench_cascade")
+    plan = plan_ir.LogicalPlan(tuple(
+        plan_ir.Operator(plan_ir.FILTER,
+                         f"bench predicate {j}: keep interesting", "v")
+        for j in range(3)))
+    return table, plan
+
+
+def _router(oracle, backends, plan):
+    emb = EmbeddingOracle(oracle)
+    router = casc.CascadeRouter(casc.EmbeddingBackend(encoder=emb))
+    for op in plan.ops:
+        router.set_bands(op, emb.bands_for(op, backends["m*"],
+                                           batch_size=BATCH))
+    return router
+
+
+def _llm_calls(meter):
+    return sum(u.calls for t, u in meter.by_tier.items()
+               if t != cost_mod.EMBED_TIER_NAME)
+
+
+def _meter_key(meter):
+    return tuple(sorted(
+        (t, u.calls, round(u.tok_in, 6), round(u.usd, 9),
+         round(u.latency_s, 6)) for t, u in meter.by_tier.items()))
+
+
+def _run_once(plan, table, oracle, *, cascade, driver, shards):
+    meter = bk.UsageMeter()
+    backends = bk.make_backends(oracle, violation_rate=0.0)
+    router = _router(oracle, backends, plan) if cascade else None
+    t0 = time.perf_counter()
+    res = ex.execute(plan, table, backends, default_tier="m*",
+                     batch_size=BATCH, morsel_size=MORSEL, driver=driver,
+                     shards=shards, meter=meter, cascade=router)
+    wall = time.perf_counter() - t0
+    key = tuple(res.table.columns[ex.ROWID])
+    return res, meter, wall, key
+
+
+def run(n_rows: int = 256):
+    oracle = _SelOracle()
+    table, plan = _workload(n_rows)
+
+    rows = []
+    runs = {}
+    for mode, cascade in (("no-cascade", False), ("cascade", True)):
+        res, meter, wall, key = _run_once(plan, table, oracle,
+                                          cascade=cascade,
+                                          driver=common.DRIVER,
+                                          shards=common.SHARDS)
+        runs[mode] = (res, meter, key)
+        row = {"mode": mode, "rows": n_rows,
+               "llm_calls": _llm_calls(meter),
+               "embed_calls": meter.calls(cost_mod.EMBED_TIER_NAME),
+               "usd": round(meter.total.usd, 6),
+               "event_wall_s": round(res.wall_s, 4),
+               "wall_s": round(wall, 4),
+               "rows_out": res.table.n_rows,
+               "rows_processed": res.rows_processed}
+        if res.cascade_stats:
+            row.update({f"cascade_{k}": v
+                        for k, v in sorted(res.cascade_stats.items())})
+        rows.append(row)
+
+    base_res, base_meter, base_key = runs["no-cascade"]
+    cas_res, cas_meter, cas_key = runs["cascade"]
+    if cas_key != base_key:
+        raise AssertionError("cascade changed the query answer")
+
+    # determinism sweep: cascade results and meter totals must be
+    # invariant across drivers and shard counts
+    ref = None
+    for driver in rt.DRIVERS:
+        for shards in (1, 2, 4):
+            _, meter, _, key = _run_once(plan, table, oracle, cascade=True,
+                                         driver=driver, shards=shards)
+            k = (key, _meter_key(meter))
+            if ref is None:
+                ref = k
+            elif k != ref:
+                raise AssertionError(
+                    f"cascade run diverged at driver={driver} "
+                    f"shards={shards}")
+
+    reduction = _llm_calls(base_meter) / max(1, _llm_calls(cas_meter))
+    summary = {
+        "mode": "summary", "rows": n_rows,
+        "llm_calls_no_cascade": _llm_calls(base_meter),
+        "llm_calls_cascade": _llm_calls(cas_meter),
+        "embed_calls": cas_meter.calls(cost_mod.EMBED_TIER_NAME),
+        "call_reduction_x": round(reduction, 2),
+        "usd_no_cascade": round(base_meter.total.usd, 6),
+        "usd_cascade": round(cas_meter.total.usd, 6),
+        "event_wall_no_cascade_s": round(base_res.wall_s, 4),
+        "event_wall_cascade_s": round(cas_res.wall_s, 4),
+        "results_identical": True,
+        "driver_shard_invariant": True,
+    }
+    rows.append(summary)
+    common.emit("BENCH_cascade", rows)
+    with open(ROOT_SUMMARY, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(common.fmt_table(
+        [r for r in rows if r["mode"] != "summary"],
+        ["mode", "rows", "llm_calls", "embed_calls", "usd",
+         "event_wall_s", "rows_out", "rows_processed"]))
+    print(f"[bench_cascade] {summary['llm_calls_no_cascade']} -> "
+          f"{summary['llm_calls_cascade']} LLM calls "
+          f"({reduction:.1f}x fewer) at byte-identical results; "
+          f"event wall {summary['event_wall_no_cascade_s']}s -> "
+          f"{summary['event_wall_cascade_s']}s")
+    if reduction < 5.0:
+        raise AssertionError(
+            f"cascade call reduction {reduction:.2f}x < 5x target")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -61,6 +61,14 @@ COALESCE = True
 # ``benchmarks.run --shards`` overrides it process-wide.
 SHARDS = 1
 
+# tier-0 embedding cascade for the nirvana analog: when on, the execution
+# context carries a ``core.cascade.CascadeRouter`` (hashing encoder) and
+# the physical optimizer calibrates/adopts bands per operator from the
+# capability sample — operators whose sample fails the improvement gate
+# simply run un-cascaded. ``benchmarks.run --cascade`` turns it on
+# process-wide.
+CASCADE = False
+
 
 def set_driver(name: str) -> None:
     global DRIVER
@@ -79,6 +87,11 @@ def set_shards(n: int) -> None:
     SHARDS = max(1, int(n))
 
 
+def set_cascade(flag: bool) -> None:
+    global CASCADE
+    CASCADE = bool(flag)
+
+
 def add_driver_arg(ap) -> None:
     import argparse
     ap.add_argument("--driver", choices=rt.DRIVERS, default=None,
@@ -91,6 +104,10 @@ def add_driver_arg(ap) -> None:
     ap.add_argument("--shards", type=int, default=None,
                     help="morsel-parallel shard workers for all system "
                          "analogs (default: 1)")
+    ap.add_argument("--cascade", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="tier-0 embedding cascade for the nirvana analog "
+                         "(optimizer-calibrated bands; default: off)")
 
 
 def env(dataset: str, max_rows: int = 0, violation_rate: float = 0.03,
@@ -150,9 +167,14 @@ class RunResult:
 def run_nirvana(q, table, backends, perfect, *, logical=True, physical=True,
                 rules=None, estimator="approx", n_iterations=3, seed=0,
                 rewriter=None, batch_size=1, concurrency=16,
-                driver=None, coalesce=None, linger=None) -> RunResult:
+                driver=None, coalesce=None, linger=None,
+                cascade=None) -> RunResult:
     plan = q.plan_for(table)
     truth = truth_of(plan, table, perfect)
+    router = None
+    if CASCADE if cascade is None else cascade:
+        from repro.core import cascade as casc
+        router = casc.CascadeRouter(casc.EmbeddingBackend())
     # one ExecutionContext for the whole pipeline (optimizers meter their
     # own phases; the final execution bills into ctx.meter)
     ctx = rt.ExecutionContext(backends=backends, default_tier="m*",
@@ -162,7 +184,8 @@ def run_nirvana(q, table, backends, perfect, *, logical=True, physical=True,
                               coalesce=COALESCE if coalesce is None
                               else coalesce,
                               linger_s=linger,
-                              shards=SHARDS)
+                              shards=SHARDS,
+                              cascade=router)
     opt_wall = opt_usd = 0.0
     lres = pres = None
     if logical:
@@ -194,6 +217,8 @@ def run_nirvana(q, table, backends, perfect, *, logical=True, physical=True,
         exec_wall_s=run.wall_s, exec_usd=run.meter.total.usd,
         detail={"plan": plan.describe(),
                 "rows_processed": run.rows_processed,
+                "cascades": dict(pres.cascades) if pres is not None else {},
+                "cascade_stats": run.cascade_stats,
                 "exec_by_tier": {t: dataclasses.asdict(u) for t, u in
                                  run.meter.by_tier.items()}})
 

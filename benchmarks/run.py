@@ -13,8 +13,8 @@ import time
 import traceback
 
 from benchmarks import common
-from benchmarks import (appendix_d_search, bench_coalesce, bench_serve,
-                        bench_shard,
+from benchmarks import (appendix_d_search, bench_cascade, bench_coalesce,
+                        bench_serve, bench_shard,
                         fig9_fig10_breakdown,
                         fig13_cardinality, fig14_batch_prompting,
                         roofline_report, table2_capability,
@@ -29,6 +29,8 @@ BENCHES = [
         max_rows=48 if q else 96)),
     ("bench_serve", lambda q: bench_serve.run(
         sleep_s=0.03 if q else 0.05)),
+    ("bench_cascade", lambda q: bench_cascade.run(
+        n_rows=128 if q else 256)),
     ("table2_capability", lambda q: table2_capability.run(
         n=200 if q else 500)),
     ("table4_runtime_cost", lambda q: table4_runtime_cost.run(
@@ -66,6 +68,8 @@ def main(argv=None):
         common.set_coalesce(args.coalesce)
     if args.shards is not None:
         common.set_shards(args.shards)
+    if args.cascade is not None:
+        common.set_cascade(args.cascade)
 
     summary = []
     n_fail = 0

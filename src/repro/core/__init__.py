@@ -23,6 +23,8 @@ from repro.core.logical_optimizer import (LogicalOptConfig,       # noqa: F401
 from repro.core.physical_optimizer import (PhysicalOptConfig,     # noqa: F401
                                            optimize as optimize_physical,
                                            select_tier, smart_select)
+from repro.core.cascade import (CascadeBands, CascadeRouter,      # noqa: F401
+                                EmbeddingBackend)
 from repro.core.runtime import (EventScheduler, ExecutionContext,  # noqa: F401
                                 OutputCache, as_context)
 from repro.core.executor import execute, ExecutionResult          # noqa: F401

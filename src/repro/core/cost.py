@@ -65,6 +65,16 @@ DEFAULT_TIERS: Dict[str, TierSpec] = {
 }
 TIER_ORDER = ("m1", "m2", "m3", "m*")
 
+# tier-0 embedding pass (core.cascade): one batched Pallas kernel launch
+# scores a whole morsel, so the per-row price is ~1000x below m1's and the
+# "per-call" latency is a kernel launch, not a network round trip. Not part
+# of TIER_ORDER — it cannot answer an operator alone; it only *routes*
+# (cascade bands decide pass/drop, the uncertain band escalates to an LLM
+# tier), so improvement-score tier selection never assigns it directly.
+EMBED_TIER_NAME = "tier0-embed"
+EMBED_ROW_S = 2e-6              # modeled per-row device time
+EMBED_TIER = TierSpec(EMBED_TIER_NAME, 0.0, 0.0001, 0.0, 0.002, 0.0)
+
 
 def tier_list(tiers: Optional[Dict[str, TierSpec]] = None):
     t = tiers or DEFAULT_TIERS
@@ -114,7 +124,8 @@ class PlanCost:
 
 def op_cost(op: plan_ir.Operator, rows_in: float, tier: TierSpec,
             avg_value_tokens: float = 60.0,
-            concurrency: int = 1, batch_size: int = 1) -> OpCost:
+            concurrency: int = 1, batch_size: int = 1,
+            cascade_escalate: Optional[float] = None) -> OpCost:
     """Cost of one operator over `rows_in` records.
 
     LLM ops: ``ceil(rows / batch_size)`` calls — the executor's batch
@@ -123,6 +134,12 @@ def op_cost(op: plan_ir.Operator, rows_in: float, tier: TierSpec,
     records share the instruction prompt and the call's output budget.
     (Reduce: hierarchical tree over batches of ~32 values per call.)
     UDF ops: zero LLM cost, negligible latency.
+
+    ``cascade_escalate`` prices a tier-0 embedding cascade on this
+    operator (``core.cascade``): one batched kernel pass scores every row
+    (EMBED_TIER prices + a launch latency), and only the escalated
+    fraction reaches the LLM tier — ``ceil(rows * frac / batch)`` calls
+    instead of ``ceil(rows / batch)``.
     """
     rows_out = rows_in * op.selectivity if op.kind == plan_ir.FILTER \
         else (1.0 if op.kind == plan_ir.REDUCE else rows_in)
@@ -144,13 +161,21 @@ def op_cost(op: plan_ir.Operator, rows_in: float, tier: TierSpec,
         c.tok_out = calls * OUT_TOKENS[op.kind]
     else:
         b = max(1, int(batch_size))
-        calls = math.ceil(rows_in / b) if rows_in > 0 else 0.0
+        llm_rows = rows_in
+        if cascade_escalate is not None:
+            llm_rows = rows_in * min(max(cascade_escalate, 0.0), 1.0)
+        calls = math.ceil(llm_rows / b) if llm_rows > 0 else 0.0
         c.llm_calls = float(calls)
-        c.tok_in = calls * ins_tok + rows_in * avg_value_tokens
+        c.tok_in = calls * ins_tok + llm_rows * avg_value_tokens
         c.tok_out = calls * OUT_TOKENS[op.kind]
     c.usd = tier.usd(c.tok_in, c.tok_out)
     per_call_out = c.tok_out / max(c.llm_calls, 1.0)
     c.latency_s = c.llm_calls * tier.latency(per_call_out)
+    if cascade_escalate is not None and op.kind != plan_ir.REDUCE:
+        # the device pass itself: every row is embedded and scored in one
+        # batched kernel launch, billed under the tier-0 price card
+        c.usd += EMBED_TIER.usd(rows_in * avg_value_tokens, 0.0)
+        c.latency_s += EMBED_TIER.latency_call_s + rows_in * EMBED_ROW_S
     return c
 
 
@@ -159,21 +184,28 @@ def plan_cost(plan: plan_ir.LogicalPlan, n_rows: int,
               default_tier: str = "m*",
               avg_value_tokens: float = 60.0,
               concurrency: int = 16, batch_size: int = 1,
-              shards: int = 1) -> PlanCost:
+              shards: int = 1,
+              cascade: Optional[Dict[int, float]] = None) -> PlanCost:
     """Estimate a full plan: record counts flow through selectivities.
 
     ``concurrency`` is one shard worker's replica width; ``shards``
     multiplies it (morsel-parallel sharded execution runs a
     pool-per-(shard, tier), so un-quota'd effective width is
-    ``concurrency * shards`` — matching ``ShardedDispatcher``)."""
+    ``concurrency * shards`` — matching ``ShardedDispatcher``).
+
+    ``cascade`` maps op index -> expected escalation fraction for
+    operators running behind a tier-0 embedding cascade (see ``op_cost``);
+    ``rows_processed`` then counts only the escalated (LLM-seen) rows —
+    the Fig. 13 metric the cascade is built to shrink."""
     tiers = tiers or DEFAULT_TIERS
     rows = float(n_rows)
     total = PlanCost(per_op=[])
     width = max(1, int(concurrency)) * max(1, int(shards))
-    for op in plan.ops:
+    for k, op in enumerate(plan.ops):
         tier = tiers[op.tier or default_tier]
+        esc = None if cascade is None else cascade.get(k)
         c = op_cost(op, rows, tier, avg_value_tokens,
-                    batch_size=batch_size)
+                    batch_size=batch_size, cascade_escalate=esc)
         total.per_op.append(c)
         total.llm_calls += c.llm_calls
         total.tok_in += c.tok_in
@@ -181,7 +213,9 @@ def plan_cost(plan: plan_ir.LogicalPlan, n_rows: int,
         total.usd += c.usd
         # ops execute in sequence; each op's calls run `width`-wide
         total.latency_s += c.latency_s / width
-        total.rows_processed += c.rows_in if op.is_llm else 0.0
+        if op.is_llm:
+            total.rows_processed += c.rows_in if esc is None \
+                else c.rows_in * min(max(esc, 0.0), 1.0)
         rows = c.rows_out
     return total
 

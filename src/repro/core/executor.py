@@ -83,6 +83,9 @@ class ExecutionResult:
     is_reduce: bool = False
     # BatchCoalescer.stats for this run (None when coalescing was inactive)
     coalesce_stats: Optional[dict] = None
+    # tier-0 cascade routing counters (None when no cascade was configured):
+    # embed_calls / passed / dropped / escalated
+    cascade_stats: Optional[dict] = None
 
     def value(self):
         """The query answer: reduce scalar, else the surviving table."""
@@ -116,14 +119,19 @@ class _PendingMorsel:
     folds the outputs in). Deferring the wait downstream keeps submission
     tasks non-blocking, which preserves the chain pool's FIFO liveness
     argument: a submitter never holds a worker while waiting on a batch
-    another queued task must complete."""
+    another queued task must complete.
 
-    __slots__ = ("op", "tbl", "fut")
+    ``fold`` (a tier-0 cascade partition's ``merge``) maps the coalescer
+    future's outputs — the *escalated* rows only — back to a full per-row
+    output list before ``apply_outputs``."""
 
-    def __init__(self, op: plan_ir.Operator, tbl: Table, fut):
+    __slots__ = ("op", "tbl", "fut", "fold")
+
+    def __init__(self, op: plan_ir.Operator, tbl: Table, fut, fold=None):
         self.op = op
         self.tbl = tbl
         self.fut = fut
+        self.fold = fold
 
 
 class _FailedMorsel:
@@ -147,6 +155,8 @@ def _force(value, ready: float) -> Tuple[Table, float]:
         raise value.exc
     if isinstance(value, _PendingMorsel):
         outs, finish = value.fut.result()
+        if value.fold is not None:
+            outs = value.fold(outs)
         tbl, _ = rt.apply_outputs(value.op, value.tbl, outs)
         return tbl, max(ready, finish)
     return value, ready
@@ -185,6 +195,7 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
             linger_s: Optional[float] = None,
             shards: Optional[int] = None,
             shard_cache: Optional[str] = None,
+            cascade=None,
             scheduler: Optional[rt.EventScheduler] = None,
             dispatcher: Optional[rt.Dispatcher] = None,
             query_key=None
@@ -202,6 +213,12 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
     reports the dispatcher's cumulative makespan. ``scheduler`` is the
     legacy form of the same: it is wrapped in a
     :class:`runtime.SimulatedDispatcher`.
+
+    ``cascade`` (a ``core.cascade.CascadeRouter``) enables the tier-0
+    embedding cascade for this execution: eligible SEM_FILTER/RANK
+    operators resolve their confident bands in one batched device pass per
+    morsel and escalate only the uncertain band to the LLM tier (see
+    ``ExecutionResult.cascade_stats``).
 
     ``query_key`` scopes this execution on a *shared* dispatcher: it
     prefixes every logical meter key (``(query, op, morsel, ...)``) so
@@ -221,7 +238,8 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
                               ("coalesce", coalesce),
                               ("linger_s", linger_s),
                               ("shards", shards),
-                              ("shard_cache", shard_cache))
+                              ("shard_cache", shard_cache),
+                              ("cascade", cascade))
             if v is not None}
     ctx = rt.as_context(backends, **over)
 
@@ -259,6 +277,26 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
             for op in plan.ops):
         coal = rt.BatchCoalescer(disp, meter, batch_size=ctx.batch_size,
                                  cache=ctx.cache, linger_s=ctx.linger_s)
+    casc = ctx.cascade
+    casc_stats = {"embed_calls": 0, "passed": 0, "dropped": 0,
+                  "escalated": 0} if casc is not None else None
+
+    def cascade_partition(op, oi, idx, values, ready):
+        """Run the tier-0 embedding pass over one morsel's values (one
+        metered ``tier0-embed`` call on the morsel's shard; chunk ``-1``
+        in the logical key sorts the device pass ahead of the operator's
+        LLM chunks) and band-route every row. The partition is a pure
+        function of (op, values), so routing — and therefore which rows
+        the LLM tiers see — is driver-, shard-, and order-invariant."""
+        part = casc.partition(op, values, disp, meter, ready=ready,
+                              shard=disp.shard_of(idx, query_key),
+                              key=kp + (oi, idx, -1))
+        with rows_lock:
+            casc_stats["embed_calls"] += 1
+            casc_stats["passed"] += part.n_pass
+            casc_stats["dropped"] += part.n_drop
+            casc_stats["escalated"] += len(part.escalate)
+        return part
 
     def llm_calls(op, oi, idx, values, ready):
         """Dispatch one operator over one morsel's values on the morsel's
@@ -291,6 +329,19 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                 # accumulation queue (empty morsels still advance the
                 # watermark) and resume downstream when their batches flush
                 values = tbl.resolve(op.input_column) if tbl.n_rows else []
+                if casc is not None and values and casc.active_for(op):
+                    # tier-0 cascade: resolve the confident bands on
+                    # device, submit ONLY the uncertain band to the batch
+                    # queue; the partition's merge folds the escalated
+                    # outputs back when the morsel is forced
+                    part = cascade_partition(op, oi, idx, values, ready)
+                    with rows_lock:
+                        rows_processed[0] += len(part.escalate)
+                    fut = group.submit(idx,
+                                       [values[i] for i in part.escalate],
+                                       max(ready, part.finish))
+                    return (_PendingMorsel(op, tbl, fut, fold=part.merge),
+                            ready)
                 with rows_lock:
                     rows_processed[0] += len(values)
                 return (_PendingMorsel(op, tbl,
@@ -309,6 +360,16 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                 (out_tbl, _), finish = disp.run_host(
                     lambda: rt.run_udf_op(op, tbl, values), tbl.n_rows,
                     ready_s=ready, shard=disp.shard_of(idx, query_key))
+                return out_tbl, finish
+            if casc is not None and casc.active_for(op):
+                part = cascade_partition(op, oi, idx, values, ready)
+                if part.escalate:
+                    esc, finish = llm_calls(
+                        op, oi, idx, [values[i] for i in part.escalate],
+                        max(ready, part.finish))
+                else:
+                    esc, finish = [], part.finish
+                out_tbl, _ = rt.apply_outputs(op, tbl, part.merge(esc))
                 return out_tbl, finish
             outs, finish = llm_calls(op, oi, idx, values, ready)
             out_tbl, _ = rt.apply_outputs(op, tbl, outs)
@@ -334,6 +395,19 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                     (tbl, out), finish = disp.run_host(
                         lambda t=tbl, v=values: rt.run_udf_op(op, t, v),
                         tbl.n_rows, ready_s=ready)
+                elif (casc is not None and tbl.n_rows > 0
+                        and casc.active_for(op)):
+                    # cascaded RANK: the pass/drop tails keep their
+                    # embedding order; only the middle band is re-ranked
+                    # by the LLM tier
+                    part = cascade_partition(op, oi, 0, values, ready)
+                    if part.escalate:
+                        esc, finish = llm_calls(
+                            op, oi, 0, [values[i] for i in part.escalate],
+                            max(ready, part.finish))
+                    else:
+                        esc, finish = [], part.finish
+                    tbl, out = rt.apply_outputs(op, tbl, part.merge(esc))
                 else:
                     outs, finish = llm_calls(op, oi, 0, values, ready)
                     tbl, out = rt.apply_outputs(op, tbl, outs)
@@ -380,4 +454,5 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
         scalar=scalar, meter=meter, wall_s=disp.wall_s,
         cpu_s=time.perf_counter() - t0, rows_processed=rows_processed[0],
         is_reduce=is_reduce,
-        coalesce_stats=dict(coal.stats) if coal is not None else None)
+        coalesce_stats=dict(coal.stats) if coal is not None else None,
+        cascade_stats=dict(casc_stats) if casc_stats is not None else None)

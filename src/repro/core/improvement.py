@@ -253,6 +253,59 @@ ESTIMATORS = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Tier-0 cascade as a candidate assignment (core.cascade)
+# ---------------------------------------------------------------------------
+
+def improvement_cascade(store: OutputStore, proxy: str,
+                        decisions: Dict[int, object]) -> Dict[str, float]:
+    """Score a tier-0 embedding cascade with the improvement-score metric.
+
+    ``decisions`` maps sample index -> the cascade's on-device resolution
+    (bool for SEM_FILTER pass/drop); indices absent from it escalate, i.e.
+    the cascade answers them with the ``proxy`` tier's own output. Returns
+
+      agree        fraction of resolved records whose decision matches the
+                   proxy tier (the cascade's escalation target — its output
+                   is what an un-cascaded plan would produce)
+      resolved     fraction answered on device (1 - escalation rate)
+      improvement  I_{m1->cascade(proxy)} under Eq. 2 with the cascade as
+                   the candidate model: escalated records contribute
+                   exactly the proxy tier's improvement term; resolved
+                   records contribute when they match the proxy *and*
+                   differ from m1.
+    """
+    n = store.n
+    if n == 0:
+        return {"agree": 1.0, "resolved": 0.0, "improvement": 0.0}
+    all_i = _idx(store)
+    store.ensure("m1", all_i)
+    store.ensure(proxy, all_i)
+
+    def same(decision, out) -> bool:
+        # filter decisions are bools; model outputs may be "yes"/"true"
+        # text — compare through the executor's one shared parser
+        if isinstance(decision, bool):
+            return decision == rt.bool_mask([out])[0]
+        return bool(semhash.semantic_equal(decision, out))
+
+    agree = 0
+    gain = 0.0
+    for i in all_i:
+        if i in decisions:
+            d = decisions[i]
+            ok = same(d, store.out(proxy, i))
+            agree += ok
+            if ok and not same(d, store.out("m1", i)):
+                gain += 1.0
+        elif not store.eq("m1", proxy, i):
+            gain += 1.0
+    nres = len(decisions)
+    return {"agree": (agree / nres) if nres else 1.0,
+            "resolved": nres / n,
+            "improvement": gain / n}
+
+
 def improvement_scores(backends: Dict[str, bk.Backend],
                        op: plan_ir.Operator, values: Sequence,
                        method: str = "approx",

@@ -34,6 +34,7 @@ import dataclasses
 from typing import Dict, List, Optional
 
 from repro.core import backends as bk
+from repro.core import cascade as casc_mod
 from repro.core import executor as ex
 from repro.core import improvement as imp
 from repro.core import plan as plan_ir
@@ -53,6 +54,10 @@ class PhysicalOptConfig:
     concurrency: Optional[int] = None   # async worker count
     mode: Optional[str] = None          # sync | async
     seed: int = 0
+    # band slack around the capability sample's class boundaries when
+    # calibrating a tier-0 cascade (ctx.cascade is set): larger margins
+    # escalate more rows
+    cascade_margin: float = 0.02
 
 
 @dataclasses.dataclass
@@ -62,6 +67,9 @@ class PhysicalOptResult:
     scores: Dict[int, Dict[str, float]]     # op index -> improvement scores
     meter: bk.UsageMeter                    # optimization-phase usage
     opt_wall_s: float
+    # op index -> adopted cascade calibration (bands + sample agreement /
+    # resolved-fraction / improvement stats); empty without ctx.cascade
+    cascades: Dict[int, dict] = dataclasses.field(default_factory=dict)
 
 
 def select_tier(scores: Dict[str, float], delta_min: float,
@@ -104,6 +112,7 @@ def _optimize(plan, sample, ctx, cfg, meter, disp) -> PhysicalOptResult:
     cursor = 0
     assignments: Dict[int, str] = {}
     all_scores: Dict[int, Dict[str, float]] = {}
+    cascades: Dict[int, dict] = {}
 
     cur = sample
     for k, op in enumerate(plan.ops):
@@ -116,15 +125,24 @@ def _optimize(plan, sample, ctx, cfg, meter, disp) -> PhysicalOptResult:
             # batch-aware scoring: sweeps run (and are priced) at the
             # context's batch size — ceil(sample/batch) calls per tier
             # instead of per-record ceilings, and the scores see the batch
-            # accuracy penalty the execution will actually pay
-            res = imp.improvement_scores(
-                ctx.backends, op, values, method=cfg.estimator, meter=meter,
-                max_cond_eval=(cfg.max_cond_eval
-                               if cfg.estimator == "approx" else None),
-                dispatcher=disp, batch_size=ctx.batch_size)
+            # accuracy penalty the execution will actually pay. The store
+            # is built here (not inside improvement_scores) so cascade
+            # calibration below reuses the sampled tier outputs.
+            store = imp.OutputStore(ctx.backends, op, values, meter=meter,
+                                    dispatcher=disp,
+                                    batch_size=ctx.batch_size)
+            if cfg.estimator == "approx":
+                res = imp.improvement_approx(
+                    store, max_cond_eval=cfg.max_cond_eval)
+            else:
+                res = imp.ESTIMATORS[cfg.estimator](store)
             tier = select_tier(res.scores, cfg.delta_min)
             assignments[k] = tier
             all_scores[k] = dict(res.scores)
+            adopted = _calibrate_cascade(ctx, cfg, op, values, store, tier,
+                                         meter)
+            if adopted is not None:
+                cascades[k] = adopted
             # scoring calls for one operator run as one concurrent stage
             # (simulated driver: drain + barrier; threads: already real)
             cursor = disp.checkpoint(meter, cursor)
@@ -137,7 +155,51 @@ def _optimize(plan, sample, ctx, cfg, meter, disp) -> PhysicalOptResult:
     tiered = plan.with_tiers(assignments)
     return PhysicalOptResult(plan=tiered, assignments=assignments,
                              scores=all_scores, meter=meter,
-                             opt_wall_s=disp.wall_s)
+                             opt_wall_s=disp.wall_s, cascades=cascades)
+
+
+def _calibrate_cascade(ctx, cfg, op, values, store, tier, meter):
+    """Calibrate tier-0 cascade bands for one operator from the capability
+    sample and adopt them onto ``ctx.cascade`` when the cascade clears the
+    improvement-score gate.
+
+    The embedding pass over the sample bills into the optimizer's meter
+    under ``tier0-embed`` (cascade calibration is optimization overhead,
+    like every other scoring sweep). SEM_FILTER bands are adopted only if
+    the resolved sample rows' disagreement with the selected tier stays
+    within ``delta_min`` — the same margin Algorithm 2 applies between
+    tiers; RANK bands (middle-quartile escalation) only need a non-empty
+    resolved tail. Returns the adopted calibration record, or None."""
+    router = ctx.cascade
+    if (router is None or op.udf is not None
+            or op.kind not in router.KINDS):
+        return None
+    cscores = router.backend.run_values(op, values, meter=meter,
+                                        batch_size=max(1, len(values)))
+    all_i = list(range(store.n))
+    store.ensure(tier, all_i)
+    ref_outs = [store.out(tier, i) for i in all_i]
+    bands = casc_mod.calibrate_bands(cscores, ref_outs, op.kind,
+                                     margin=cfg.cascade_margin)
+    if bands is None:
+        return None
+    if op.kind == plan_ir.FILTER:
+        decisions = {i: True for i, s in enumerate(cscores)
+                     if s >= bands.hi}
+        decisions.update({i: False for i, s in enumerate(cscores)
+                          if s <= bands.lo})
+        stats = imp.improvement_cascade(store, tier, decisions)
+        if not decisions or (1.0 - stats["agree"]) > cfg.delta_min:
+            return None
+    else:
+        resolved = sum(1 for s in cscores
+                       if s >= bands.hi or s <= bands.lo)
+        if resolved == 0:
+            return None
+        stats = {"agree": None, "resolved": resolved / len(cscores),
+                 "improvement": None}
+    router.set_bands(op, bands)
+    return {"bands": (bands.lo, bands.hi), **stats}
 
 
 def _apply_op(op: plan_ir.Operator, table: Table, values,

@@ -1238,7 +1238,13 @@ class ExecutionContext:
     cross-shard duplicates bill once through the single-flight protocol
     and results/calls/meters are shard-count invariant) or ``"local"``
     (each shard memoizes independently — cheaper coordination, duplicate
-    billing across shards)."""
+    billing across shards).
+
+    ``cascade`` (a ``core.cascade.CascadeRouter`` or None) enables the
+    tier-0 embedding cascade: SEM_FILTER/RANK operators with bands score
+    every morsel in one batched device pass and only the uncertain band
+    escalates to the LLM tier. Typed ``Any`` to keep this module free of
+    the kernels import chain."""
     backends: Dict[str, bk.Backend]
     default_tier: str = "m*"
     concurrency: int = 16
@@ -1251,6 +1257,7 @@ class ExecutionContext:
     linger_s: Optional[float] = None
     shards: int = 1
     shard_cache: str = "shared"
+    cascade: Optional[Any] = None
     cache: Optional[OutputCache] = None
     meter: bk.UsageMeter = dataclasses.field(default_factory=bk.UsageMeter)
     # long-lived dispatcher owned by this context (see dispatcher()/close();

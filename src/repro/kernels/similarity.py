@@ -26,6 +26,16 @@ BM = 128
 BN = 128
 
 
+def _pad_rows(x, block: int):
+    """Pad axis 0 up to a multiple of ``block`` (zero rows are inert for
+    both kernels: a zero embedding row dots to 0). Returns (padded, m0)."""
+    m0 = x.shape[0]
+    pad = (-m0) % block
+    if pad == 0:
+        return x, m0
+    return jnp.pad(x, ((0, pad), (0, 0))), m0
+
+
 def _matrix_kernel(a_ref, b_ref, o_ref):
     a = a_ref[...].astype(jnp.float32)
     b = b_ref[...].astype(jnp.float32)
@@ -34,13 +44,20 @@ def _matrix_kernel(a_ref, b_ref, o_ref):
 
 def cosine_matrix(a, b, *, bm: int = BM, bn: int = BN,
                   interpret: bool = False):
-    """a: (M, D), b: (N, D), rows L2-normalized. Returns (M, N) fp32."""
+    """a: (M, D), b: (N, D), rows L2-normalized. Returns (M, N) fp32.
+
+    Arbitrary M/N: inputs are padded up to block multiples and the result
+    is sliced back, so callers (morsels, embedding cascades) never need
+    divisibility — M=1 and M=BM+1 both work."""
+    if a.shape[0] == 0 or b.shape[0] == 0:
+        return jnp.zeros((a.shape[0], b.shape[0]), jnp.float32)
+    a, m0 = _pad_rows(a, min(bm, a.shape[0]))
+    b, n0 = _pad_rows(b, min(bn, b.shape[0]))
     m, d = a.shape
     n, _ = b.shape
     bm = min(bm, m)
     bn = min(bn, n)
-    assert m % bm == 0 and n % bn == 0, (m, bm, n, bn)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _matrix_kernel,
         grid=(m // bm, n // bn),
         in_specs=[
@@ -53,6 +70,7 @@ def cosine_matrix(a, b, *, bm: int = BM, bn: int = BN,
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(a, b)
+    return out if (m0 == m and n0 == n) else out[:m0, :n0]
 
 
 def _rowwise_kernel(a_ref, b_ref, o_ref):
@@ -62,10 +80,14 @@ def _rowwise_kernel(a_ref, b_ref, o_ref):
 
 
 def rowwise_cosine(a, b, *, bm: int = BM, interpret: bool = False):
-    """Aligned-pair cosine: (M, D), (M, D) -> (M,) fp32."""
+    """Aligned-pair cosine: (M, D), (M, D) -> (M,) fp32. Arbitrary M:
+    rows pad up to a block multiple and the result slices back."""
+    if a.shape[0] == 0:
+        return jnp.zeros((0,), jnp.float32)
+    a, m0 = _pad_rows(a, min(bm, a.shape[0]))
+    b, _ = _pad_rows(b, min(bm, b.shape[0]))
     m, d = a.shape
     bm = min(bm, m)
-    assert m % bm == 0, (m, bm)
     out = pl.pallas_call(
         _rowwise_kernel,
         grid=(m // bm,),
@@ -79,4 +101,4 @@ def rowwise_cosine(a, b, *, bm: int = BM, interpret: bool = False):
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(a, b)
-    return out[:, 0]
+    return out[:m0, 0]

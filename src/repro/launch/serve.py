@@ -42,6 +42,10 @@ Execution knobs (one line each; all apply to ``--semantic`` modes):
   analytics-level counterpart of the ContinuousBatcher slot-fill policy.
 * ``--shards N`` — morsel-parallel shard workers, pool-per-(shard, tier)
   dispatch; results/calls/meters identical to ``--shards 1``.
+* ``--cascade`` — tier-0 embedding cascade (``core.cascade``): filter and
+  rank predicates score every morsel in one batched device pass; only the
+  band between ``--cascade-lo`` and ``--cascade-hi`` escalates to the LLM
+  tier (device passes bill under ``tier0-embed``).
 * ``--serve N`` — admit N workload queries onto one shared QueryServer
   (0 = off); ``--stagger S`` Poisson-ish mean inter-admission gap in
   seconds (seeded, explicit offsets; 0 = admit all at once).
@@ -87,6 +91,12 @@ def _semantic_context(args):
     backends = bk.make_backends(oracle)
     backends["m1"] = JAXBackend(tier, engine, oracle=oracle,
                                 max_new_tokens=args.max_new)
+    router = None
+    if args.cascade:
+        from repro.core import cascade as casc_mod
+        router = casc_mod.CascadeRouter(
+            default_bands=casc_mod.CascadeBands(lo=args.cascade_lo,
+                                                hi=args.cascade_hi))
     ctx = rt.ExecutionContext(backends=backends, default_tier="m1",
                               concurrency=args.slots,
                               morsel_size=args.slots * 4,
@@ -94,7 +104,8 @@ def _semantic_context(args):
                               batch_size=args.batch,
                               coalesce=args.coalesce,
                               linger_s=args.linger,
-                              shards=args.shards)
+                              shards=args.shards,
+                              cascade=router)
     return table, cfg, engine, ctx
 
 
@@ -112,7 +123,8 @@ def serve_semantic(args):
     print(f"[serve] semantic query {q.qid} over {table.name} "
           f"({table.n_rows} rows), m1 = {cfg.name} on {args.slots} slots, "
           f"driver={args.driver} shards={args.shards} batch={args.batch} "
-          f"coalesce={args.coalesce} linger={args.linger}")
+          f"coalesce={args.coalesce} linger={args.linger} "
+          f"cascade={args.cascade}")
     t0 = time.time()
     res = ex.execute(q.plan_for(table), table, ctx)
     dt = time.time() - t0
@@ -129,6 +141,8 @@ def serve_semantic(args):
     for tname, u in ctx.meter.by_tier.items():
         print(f"  [{tname}] calls={u.calls} tok_in={u.tok_in:.0f} "
               f"usd=${u.usd:.4f} latency_sum={u.latency_s:.2f}s")
+    if res.cascade_stats is not None:
+        print(f"[serve] cascade stats={res.cascade_stats}")
     print(f"[serve] engine stats={engine.stats} "
           f"occupancy={engine.occupancy:.2f}")
     return res
@@ -233,6 +247,18 @@ def build_parser() -> argparse.ArgumentParser:
                     help="--semantic: max seconds a partial coalesced "
                          "batch waits for more rows before flushing "
                          "(default: flush only on morsel watermarks)")
+    ap.add_argument("--cascade", action="store_true",
+                    help="--semantic: tier-0 embedding cascade — filter/"
+                         "rank predicates resolve high-confidence rows in "
+                         "one batched device pass; only the uncertain "
+                         "band escalates to the LLM tier")
+    ap.add_argument("--cascade-lo", type=float, default=-0.35,
+                    help="--cascade: drop rows scoring at or below this "
+                         "cosine (blanket band; the physical optimizer "
+                         "calibrates per-operator bands instead)")
+    ap.add_argument("--cascade-hi", type=float, default=0.35,
+                    help="--cascade: pass rows scoring at or above this "
+                         "cosine; lo < score < hi escalates")
     ap.add_argument("--serve", type=int, default=0,
                     help="--semantic: admit N workload queries onto one "
                          "long-lived QueryServer (shared dispatcher, "

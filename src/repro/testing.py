@@ -5,12 +5,20 @@ the driver-equivalence and coalescing suites assert exact call counts,
 batch groupings, and per-call latencies against these fakes, and
 ``benchmarks/bench_coalesce.py`` uses the same class so its measured
 walls are comparable with the tests' acceptance bounds.
+:class:`EmbeddingOracle` plays the same role for the tier-0 cascade:
+a deterministic encoder whose cosine scores track the capability
+simulator's difficulty draws, shared by the cascade tests and
+``benchmarks/bench_cascade.py``.
 """
 from __future__ import annotations
 
+import hashlib
+import math
 import threading
 import time
 from typing import Optional, Sequence
+
+import numpy as np
 
 from repro.core import backends as bk
 from repro.core import plan as plan_ir
@@ -79,6 +87,77 @@ def result_fingerprint(res):
         return ("reduce", res.scalar)
     return ("table", tuple(res.table.columns[ex.ROWID]),
             tuple(map(str, res.table.columns["a"])))
+
+
+class EmbeddingOracle:
+    """Deterministic seedable encoder for ``core.cascade`` tests/benches.
+
+    Implements the cascade ``Encoder`` protocol with hash-derived unit
+    vectors whose cosine against the operator anchor *correlates with the
+    capability simulator's difficulty draws*: a value with difficulty
+    ``d`` (the exact ``_unit_hash("difficulty", ...)`` draw the
+    :class:`~repro.core.backends.SimulatedBackend` uses) embeds at
+
+        cos = sign * (base + spread * (1 - d))
+
+    where ``sign`` is +1 iff the oracle's true answer is truthy. Easy
+    records sit far from the decision boundary, hard ones near it — so
+    band routing is testable end-to-end without a real encoder, and
+    :meth:`bands_for` can place thresholds such that every on-device
+    resolution targets a record the given backend answers correctly
+    (making cascade and no-cascade results identical at
+    ``violation_rate=0``)."""
+
+    def __init__(self, oracle, seed: int = 0, dim: Optional[int] = None,
+                 base: float = 0.15, spread: float = 0.80):
+        from repro.core import semhash
+        self.oracle = oracle
+        self.seed = seed
+        self.dim = dim if dim is not None else semhash.DIM
+        self.base = base
+        self.spread = spread
+
+    def _unit(self, *parts) -> np.ndarray:
+        h = hashlib.blake2b("\x1f".join(map(str, parts)).encode(),
+                            digest_size=8).digest()
+        rng = np.random.default_rng(int.from_bytes(h, "little"))
+        v = rng.standard_normal(self.dim)
+        return v / np.linalg.norm(v)
+
+    def encode_anchor(self, op) -> np.ndarray:
+        return self._unit("anchor", self.seed, op.kind,
+                          op.instruction).astype(np.float32)
+
+    def encode_values(self, op, values: Sequence) -> np.ndarray:
+        a = self._unit("anchor", self.seed, op.kind, op.instruction)
+        rows = []
+        for v in values:
+            diff = bk._unit_hash("difficulty", self.seed, op.kind,
+                                 op.instruction, v)
+            truth = self.oracle.answer(op, v)
+            sign = 1.0 if bool(truth) else -1.0
+            cos = sign * min(0.999,
+                             self.base + self.spread * (1.0 - diff))
+            b = self._unit("tangent", self.seed, op.kind, str(v))
+            b = b - float(b @ a) * a
+            b = b / np.linalg.norm(b)
+            rows.append(cos * a + math.sqrt(max(0.0, 1.0 - cos * cos)) * b)
+        return np.asarray(rows, np.float32)
+
+    def bands_for(self, op, backend, batch_size: int = 1,
+                  margin: float = 0.02):
+        """Bands under which every on-device resolution hits a record
+        ``backend`` answers correctly: resolved => |cos| >= hi =>
+        difficulty <= cap - margin/spread < cap => correct (at
+        ``violation_rate=0``), so cascade results match no-cascade
+        byte-for-byte while everything easier than the backend's
+        effective capability skips the LLM."""
+        from repro.core.cascade import CascadeBands
+        cap = backend._capability(op, batch_size) \
+            if hasattr(backend, "_capability") else 1.0
+        cap = min(max(cap, 0.0), 1.0)
+        hi = min(0.999, self.base + self.spread * (1.0 - cap) + margin)
+        return CascadeBands(lo=-hi, hi=hi)
 
 
 class SleepBackend:

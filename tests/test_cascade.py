@@ -1,0 +1,467 @@
+"""Tier-0 embedding cascade suite (core.cascade).
+
+Covers the tentpole contract: cascade-enabled execution keeps the three
+invariance guarantees (driver, shard count, admission order) over results
+AND meter totals; only escalated rows bill under the LLM tier while device
+passes bill under ``tier0-embed``; band edge cases (all-pass,
+all-escalate) behave; an embedding-pass failure poisons only its morsels;
+the physical optimizer calibrates bands from the capability sample and
+adopts the cascade through the improvement-score gate; and the cost model
+prices a cascaded operator as one kernel pass + ceil(escalated/batch) LLM
+calls."""
+import math
+import time
+
+import pytest
+
+from repro.core import backends as bk
+from repro.core import cascade as casc
+from repro.core import cost as cost_mod
+from repro.core import executor as ex
+from repro.core import improvement as imp
+from repro.core import physical_optimizer as po
+from repro.core import plan as P
+from repro.core import runtime as rt
+from repro.core.table import Table
+from repro.testing import EmbeddingOracle, result_fingerprint
+
+SHARD_COUNTS = (1, 2, 4)
+BATCH = 8
+
+
+class SelOracle:
+    """Deterministic ~55%-selective filters, echo maps, numeric ranks."""
+
+    def answer(self, op, value):
+        if op.kind == P.FILTER:
+            return bk._unit_hash("truth", op.instruction, value) < 0.55
+        if op.kind == P.RANK:
+            return round(1.0 + 9.0 * bk._unit_hash("score", op.instruction,
+                                                   value), 3)
+        return f"A:{value}"
+
+    def answer_reduce(self, op, values):
+        return len(list(values))
+
+
+def _table(n=160, tag="casc"):
+    return Table({"v": [f"{tag}-row-{i:03d}" for i in range(n)]}, name=tag)
+
+
+def _filter_plan(k=2, tag="casc"):
+    return P.LogicalPlan(tuple(
+        P.Operator(P.FILTER, f"{tag} predicate {j}: keep interesting", "v")
+        for j in range(k)))
+
+
+def _router(oracle, backends, plan, tier="m*", batch_size=BATCH):
+    """Bands from the EmbeddingOracle: every on-device resolution targets
+    a record ``tier`` answers correctly (violation_rate must be 0)."""
+    emb = EmbeddingOracle(oracle)
+    router = casc.CascadeRouter(casc.EmbeddingBackend(encoder=emb))
+    for op in plan.ops:
+        if op.kind in router.KINDS:
+            router.set_bands(op, emb.bands_for(op, backends[tier],
+                                               batch_size=batch_size))
+    return router
+
+
+def _meter_key(meter):
+    return {t: (u.calls, round(u.tok_in, 6), round(u.tok_out, 6),
+                round(u.usd, 9), round(u.latency_s, 6))
+            for t, u in sorted(meter.by_tier.items())}
+
+
+def _llm_calls(meter):
+    return sum(u.calls for t, u in meter.by_tier.items()
+               if t != cost_mod.EMBED_TIER_NAME)
+
+
+def _backends(oracle):
+    # violation_rate=0: resolved-band correctness relies on nested
+    # correctness, so cascade/no-cascade equality is exact
+    return bk.make_backends(oracle, violation_rate=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Equal results, fewer calls
+# ---------------------------------------------------------------------------
+
+def test_cascade_matches_no_cascade_with_fewer_llm_calls():
+    oracle = SelOracle()
+    table, plan = _table(), _filter_plan()
+    backends = _backends(oracle)
+    router = _router(oracle, backends, plan)
+
+    m0, m1 = bk.UsageMeter(), bk.UsageMeter()
+    base = ex.execute(plan, table, backends, default_tier="m*",
+                      batch_size=BATCH, morsel_size=32, meter=m0)
+    cas = ex.execute(plan, table, _backends(oracle), default_tier="m*",
+                     batch_size=BATCH, morsel_size=32, meter=m1,
+                     cascade=router)
+    assert result_fingerprint_filter(base) == result_fingerprint_filter(cas)
+    assert cas.cascade_stats["escalated"] > 0          # band is live
+    assert cas.cascade_stats["passed"] + cas.cascade_stats["dropped"] > 0
+    assert _llm_calls(m1) < _llm_calls(m0)
+    assert m1.calls(cost_mod.EMBED_TIER_NAME) == \
+        cas.cascade_stats["embed_calls"] > 0
+
+
+def result_fingerprint_filter(res):
+    """Fingerprint for filter-only plans (no mapped column)."""
+    return tuple(res.table.columns[ex.ROWID])
+
+
+# ---------------------------------------------------------------------------
+# Invariance: drivers x shards with cascade enabled
+# ---------------------------------------------------------------------------
+
+def test_cascade_invariance_across_drivers_and_shards():
+    oracle = SelOracle()
+    table = _table()
+    plan = P.LogicalPlan(_filter_plan().ops + (
+        P.Operator(P.MAP, "casc annotate", "v", "a"),))
+    backends = _backends(oracle)
+    router = _router(oracle, backends, plan)
+    ref = None
+    for driver in rt.DRIVERS:
+        for shards in SHARD_COUNTS:
+            meter = bk.UsageMeter()
+            res = ex.execute(plan, table, _backends(oracle),
+                             default_tier="m*", batch_size=BATCH,
+                             morsel_size=16, driver=driver, shards=shards,
+                             meter=meter, cascade=router)
+            key = (result_fingerprint(res), res.rows_processed,
+                   tuple(sorted(res.cascade_stats.items())),
+                   _meter_key(meter))
+            if ref is None:
+                ref = key
+            assert key == ref, (driver, shards)
+
+
+def test_cascade_rank_invariance_across_drivers_and_shards():
+    oracle = SelOracle()
+    table = _table(96)
+    plan = P.LogicalPlan((
+        P.Operator(P.RANK, "casc order by interest", "v", "rank"),))
+    backends = _backends(oracle)
+    router = _router(oracle, backends, plan, batch_size=BATCH)
+    ref = None
+    for driver in rt.DRIVERS:
+        for shards in SHARD_COUNTS:
+            meter = bk.UsageMeter()
+            res = ex.execute(plan, table, _backends(oracle),
+                             default_tier="m*", batch_size=BATCH,
+                             morsel_size=16, driver=driver, shards=shards,
+                             meter=meter, cascade=router)
+            key = (tuple(res.table.columns["rank"]),
+                   tuple(sorted(res.cascade_stats.items())),
+                   _meter_key(meter))
+            if ref is None:
+                ref = key
+            assert key == ref, (driver, shards)
+    assert ref[1][1][1] > 0        # ("embed_calls", > 0)
+
+
+# ---------------------------------------------------------------------------
+# Billing: escalated rows only under the LLM tier
+# ---------------------------------------------------------------------------
+
+def test_cascade_bills_only_escalated_rows_to_llm_tier():
+    oracle = SelOracle()
+    table, plan = _table(), _filter_plan(k=1)
+    backends = _backends(oracle)
+    router = _router(oracle, backends, plan)
+    meter = bk.UsageMeter()
+    res = ex.execute(plan, table, backends, default_tier="m*",
+                     batch_size=BATCH, morsel_size=32, meter=meter,
+                     cascade=router)
+    esc = res.cascade_stats["escalated"]
+    assert 0 < esc < table.n_rows
+    # coalesced formation is global: escalated rows across morsels pack
+    # into ceil(esc/batch) LLM calls; nothing else reaches the LLM tier
+    assert meter.calls("m*") == math.ceil(esc / BATCH)
+    assert res.rows_processed == esc
+    # the device passes: one metered call per morsel, modeled latency in
+    # the per-tier totals (driver-invariant), measured in the call log
+    n_morsels = math.ceil(table.n_rows / 32)
+    u = meter.by_tier[cost_mod.EMBED_TIER_NAME]
+    assert u.calls == n_morsels
+    assert u.usd > 0.0
+    modeled = n_morsels * cost_mod.EMBED_TIER.latency_call_s \
+        + table.n_rows * cost_mod.EMBED_ROW_S
+    assert u.latency_s == pytest.approx(modeled)
+    embed_logged = [lat for t, lat in meter.call_log
+                    if t == cost_mod.EMBED_TIER_NAME]
+    assert len(embed_logged) == n_morsels
+    assert all(lat >= 0.0 for lat in embed_logged)
+
+
+# ---------------------------------------------------------------------------
+# Band edge cases
+# ---------------------------------------------------------------------------
+
+def test_cascade_all_pass_band_skips_llm_entirely():
+    oracle = SelOracle()
+    table, plan = _table(64), _filter_plan(k=1)
+    router = casc.CascadeRouter(
+        casc.EmbeddingBackend(encoder=EmbeddingOracle(oracle)),
+        default_bands=casc.CascadeBands(lo=-2.0, hi=-2.0))
+    meter = bk.UsageMeter()
+    res = ex.execute(plan, table, _backends(oracle), default_tier="m*",
+                     batch_size=BATCH, morsel_size=16, meter=meter,
+                     cascade=router)
+    assert res.table.n_rows == table.n_rows       # every row passed
+    assert res.cascade_stats["passed"] == table.n_rows
+    assert res.cascade_stats["escalated"] == 0
+    assert _llm_calls(meter) == 0
+    assert meter.calls(cost_mod.EMBED_TIER_NAME) > 0
+
+
+def test_cascade_all_escalate_band_reproduces_no_cascade_billing():
+    oracle = SelOracle()
+    table, plan = _table(64), _filter_plan(k=1)
+    backends = _backends(oracle)
+    m0 = bk.UsageMeter()
+    base = ex.execute(plan, table, backends, default_tier="m*",
+                      batch_size=BATCH, morsel_size=16, meter=m0)
+    router = casc.CascadeRouter(
+        casc.EmbeddingBackend(encoder=EmbeddingOracle(oracle)),
+        default_bands=casc.CascadeBands(lo=-2.0, hi=2.0))
+    m1 = bk.UsageMeter()
+    cas = ex.execute(plan, table, _backends(oracle), default_tier="m*",
+                     batch_size=BATCH, morsel_size=16, meter=m1,
+                     cascade=router)
+    assert result_fingerprint_filter(base) == result_fingerprint_filter(cas)
+    assert cas.cascade_stats["escalated"] == table.n_rows
+    assert cas.cascade_stats["passed"] == cas.cascade_stats["dropped"] == 0
+    # the LLM tier sees exactly the un-cascaded workload...
+    assert m1.calls("m*") == m0.calls("m*")
+    assert m1.by_tier["m*"].tok_in == pytest.approx(m0.by_tier["m*"].tok_in)
+    # ...plus the (wasted) device passes on top
+    assert m1.calls(cost_mod.EMBED_TIER_NAME) > 0
+
+
+def test_cascade_bands_validate():
+    with pytest.raises(ValueError):
+        casc.CascadeBands(lo=0.5, hi=-0.5)
+
+
+# ---------------------------------------------------------------------------
+# Failure isolation: a broken embedding pass poisons only its morsels
+# ---------------------------------------------------------------------------
+
+class _BoomEncoder(EmbeddingOracle):
+    def encode_values(self, op, values):
+        if any("BOOM" in str(v) for v in values):
+            raise RuntimeError("encoder down")
+        return super().encode_values(op, values)
+
+
+def test_cascade_embed_failure_poisons_only_its_morsels():
+    """An embedding-pass failure must surface as the execution's error
+    without deadlocking the coalescer: the failed morsel's chain carries
+    poison (still advancing downstream watermarks) while every other
+    morsel completes."""
+    oracle = SelOracle()
+    table = Table({"v": [f"x{i:02d}" if i < 24 else f"BOOM{i:02d}"
+                         for i in range(32)]}, name="boom")
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "boom keep", "v"),
+        P.Operator(P.MAP, "boom annotate", "v", "a"),
+    ))
+    backends = _backends(oracle)
+    router = casc.CascadeRouter(
+        casc.EmbeddingBackend(encoder=_BoomEncoder(oracle)),
+        default_bands=casc.CascadeBands(lo=-2.0, hi=2.0))
+    for driver in rt.DRIVERS:
+        t0 = time.perf_counter()
+        with pytest.raises(RuntimeError, match="encoder down"):
+            ex.execute(plan, table, backends, default_tier="m*",
+                       batch_size=BATCH, morsel_size=8, driver=driver,
+                       cascade=router)
+        assert time.perf_counter() - t0 < 30.0       # raised, not hung
+
+
+# ---------------------------------------------------------------------------
+# Optimizer: cascade as a calibrated candidate assignment
+# ---------------------------------------------------------------------------
+
+def test_optimizer_calibrates_and_adopts_cascade_bands():
+    oracle = SelOracle()
+    table, plan = _table(128), _filter_plan(k=2)
+    backends = _backends(oracle)
+    router = casc.CascadeRouter(
+        casc.EmbeddingBackend(encoder=EmbeddingOracle(oracle)))
+    assert not router.active_for(plan.ops[0])        # no bands yet
+    ctx = rt.ExecutionContext(backends=backends, default_tier="m*",
+                              batch_size=BATCH, cascade=router)
+    res = po.optimize(plan, table, ctx,
+                      po.PhysicalOptConfig(sample_min=24, sample_max=24))
+    assert res.cascades, "no operator adopted a cascade"
+    for k, rec in res.cascades.items():
+        lo, hi = rec["bands"]
+        assert lo <= hi
+        assert rec["resolved"] > 0.0
+        assert rec["agree"] == pytest.approx(1.0)    # conservative bands
+        assert router.active_for(plan.ops[k])
+    # calibration overhead billed under tier0-embed in the optimizer meter
+    assert res.meter.calls(cost_mod.EMBED_TIER_NAME) >= len(res.cascades)
+    # the calibrated router drives a real execution end to end
+    meter = bk.UsageMeter()
+    out = ex.execute(res.plan, table, backends, batch_size=BATCH,
+                     morsel_size=32, meter=meter, cascade=router)
+    assert out.cascade_stats["passed"] + out.cascade_stats["dropped"] > 0
+
+
+def test_improvement_cascade_scores_resolved_and_escalated():
+    oracle = SelOracle()
+    op = P.Operator(P.FILTER, "casc predicate 0: keep interesting", "v")
+    values = [f"casc-row-{i:03d}" for i in range(24)]
+    backends = _backends(oracle)
+    store = imp.OutputStore(backends, op, values)
+    truth = [bool(oracle.answer(op, v)) for v in values]
+    # perfect decisions on half the sample -> agree == 1, resolved == 0.5
+    decisions = {i: truth[i] for i in range(0, len(values), 2)}
+    stats = imp.improvement_cascade(store, "m*", decisions)
+    assert stats["resolved"] == pytest.approx(0.5)
+    assert stats["agree"] == pytest.approx(1.0)
+    assert 0.0 <= stats["improvement"] <= 1.0
+    # empty decisions: pure escalation == the proxy tier's own improvement
+    none_resolved = imp.improvement_cascade(store, "m*", {})
+    i1s = sum(not store.eq("m1", "m*", i)
+              for i in range(len(values))) / len(values)
+    assert none_resolved["improvement"] == pytest.approx(i1s)
+    assert none_resolved["resolved"] == 0.0
+
+
+def test_calibrate_bands_filter_separates_sample_classes():
+    scores = [0.8, 0.7, 0.6, -0.5, -0.6, -0.7]
+    ref_outs = [True, True, True, False, False, False]
+    bands = casc.calibrate_bands(scores, ref_outs, P.FILTER, margin=0.02)
+    # separable sample: the bands collapse to the midpoint, nothing in the
+    # sample escalates and nothing is misrouted
+    assert bands.lo == bands.hi
+    assert -0.5 < bands.lo < 0.6
+    overlapping = casc.calibrate_bands([0.5, -0.1, 0.4, 0.1],
+                                       [True, True, False, False],
+                                       P.FILTER, margin=0.02)
+    # overlapping classes widen the escalation band around the overlap
+    assert overlapping.lo < overlapping.hi
+    assert overlapping.lo <= -0.1 + 0.02
+    assert overlapping.hi >= 0.4 - 0.02
+    # one-class samples never auto-answer the unseen class
+    no_pos = casc.calibrate_bands([-0.5, -0.2], [False, False], P.FILTER)
+    assert no_pos.hi == 2.0
+    no_neg = casc.calibrate_bands([0.5, 0.2], [True, True], P.FILTER)
+    assert no_neg.lo == -2.0
+    assert casc.calibrate_bands([], [], P.FILTER) is None
+
+
+# ---------------------------------------------------------------------------
+# Rank partition semantics
+# ---------------------------------------------------------------------------
+
+def test_rank_cascade_partition_orders_pass_escalate_drop():
+    op = P.Operator(P.RANK, "order", "v", "rank")
+    resolved = [casc._RANK_PASS_OFFSET + 0.9, None,
+                casc._RANK_DROP_OFFSET - 0.9, None]
+    part = casc.CascadePartition(op, list(resolved), escalate=[1, 3],
+                                 n_pass=1, n_drop=1, finish=0.0)
+    # LLM ranks row 3 above row 1
+    full = part.merge(["2", "9"])
+    assert full[0] > full[3] > full[1] > full[2]
+    # escalated scores normalize into (0, 1): between both offset bands
+    assert 0.0 < full[1] < full[3] < 1.0
+    with pytest.raises(ValueError):
+        part.merge(["only-one"])
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+def test_cost_model_prices_cascade_escalation():
+    op = P.Operator(P.FILTER, "keep the interesting rows", "v")
+    spec = cost_mod.DEFAULT_TIERS["m1"]
+    base = cost_mod.op_cost(op, 1000.0, spec, batch_size=8)
+    cas = cost_mod.op_cost(op, 1000.0, spec, batch_size=8,
+                           cascade_escalate=0.1)
+    assert cas.llm_calls == math.ceil(1000.0 * 0.1 / 8)
+    assert cas.llm_calls < base.llm_calls
+    assert cas.tok_in < base.tok_in
+    assert cas.usd < base.usd                     # embed pass ~free vs m1
+    # the embed pass is priced in: more than a pure 10% LLM slice
+    pure = cost_mod.op_cost(op, 100.0, spec, batch_size=8)
+    assert cas.usd > pure.usd
+    # rows_out (selectivity flow) is unchanged by the cascade
+    assert cas.rows_out == base.rows_out
+
+
+def test_plan_cost_counts_escalated_rows_only():
+    plan = P.LogicalPlan((
+        P.Operator(P.FILTER, "keep", "v"),
+        P.Operator(P.MAP, "annotate", "v", "a"),
+    ))
+    base = cost_mod.plan_cost(plan, 1000, batch_size=8)
+    cas = cost_mod.plan_cost(plan, 1000, batch_size=8, cascade={0: 0.1})
+    # filter rows: 1000 -> 100 escalated; map (uncascaded) sees 500 either
+    # way (selectivity flow is unchanged)
+    assert base.rows_processed == pytest.approx(1500.0)
+    assert cas.rows_processed == pytest.approx(600.0)
+    assert cas.llm_calls < base.llm_calls
+    assert cas.usd < base.usd
+
+
+# ---------------------------------------------------------------------------
+# Serving surface
+# ---------------------------------------------------------------------------
+
+def test_query_server_runs_cascade_per_query():
+    """A cascade on the server's context applies to every admitted query
+    (ctx.fork carries it), and per-query meters bill the device passes."""
+    from repro.launch.query_server import QueryServer
+    oracle = SelOracle()
+    backends = _backends(oracle)
+    tags = ("srv-a", "srv-b")
+    queries, solos = {}, {}
+    router = casc.CascadeRouter(
+        casc.EmbeddingBackend(encoder=EmbeddingOracle(oracle)))
+    emb = EmbeddingOracle(oracle)
+    for tag in tags:
+        table, plan = _table(96, tag=tag), _filter_plan(k=1, tag=tag)
+        router.set_bands(plan.ops[0],
+                         emb.bands_for(plan.ops[0], backends["m*"],
+                                       batch_size=BATCH))
+        queries[tag] = (plan, table)
+    for tag, (plan, table) in queries.items():
+        meter = bk.UsageMeter()
+        res = ex.execute(plan, table, backends, default_tier="m*",
+                         batch_size=BATCH, morsel_size=16, meter=meter,
+                         cascade=router)
+        solos[tag] = (res, meter)
+    ctx = rt.ExecutionContext(backends=backends, default_tier="m*",
+                              batch_size=BATCH, morsel_size=16,
+                              driver="simulated", cascade=router)
+    with QueryServer(ctx) as server:
+        handles = {tag: server.submit(plan, table, name=tag)
+                   for tag, (plan, table) in queries.items()}
+        server.drain()
+    for tag, h in handles.items():
+        solo, solo_meter = solos[tag]
+        res = h.result()
+        assert result_fingerprint_filter(res) == \
+            result_fingerprint_filter(solo)
+        assert h.meter.calls(cost_mod.EMBED_TIER_NAME) == \
+            solo_meter.calls(cost_mod.EMBED_TIER_NAME) > 0
+        assert h.meter.calls("m*") == solo_meter.calls("m*")
+
+
+def test_serve_cli_exposes_cascade_knobs():
+    from repro.launch.serve import build_parser
+    args = build_parser().parse_args(
+        ["--semantic", "movie", "--cascade", "--cascade-lo", "-0.2",
+         "--cascade-hi", "0.4"])
+    assert args.cascade and args.cascade_lo == -0.2 \
+        and args.cascade_hi == 0.4
+    assert not build_parser().parse_args([]).cascade

@@ -181,6 +181,34 @@ def test_rowwise_cosine():
                                atol=1e-5)
 
 
+# the similarity module itself (not the padding ops wrappers) must accept
+# arbitrary M/N — morsels and cascade batches are rarely block multiples
+@pytest.mark.parametrize("m", [1, 127, 129])
+def test_cosine_matrix_arbitrary_rows(m):
+    from repro.kernels import similarity as sim
+    a = RNG.normal(size=(m, 256)).astype(np.float32)
+    b = RNG.normal(size=(67, 256)).astype(np.float32)
+    a /= np.linalg.norm(a, axis=1, keepdims=True)
+    b /= np.linalg.norm(b, axis=1, keepdims=True)
+    got = sim.cosine_matrix(a, b, interpret=True)
+    assert got.shape == (m, 67)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.cosine_matrix_ref(a, b)),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("m", [1, 127, 129])
+def test_rowwise_cosine_arbitrary_rows(m):
+    from repro.kernels import similarity as sim
+    a = RNG.normal(size=(m, 256)).astype(np.float32)
+    b = RNG.normal(size=(m, 256)).astype(np.float32)
+    got = sim.rowwise_cosine(a, b, interpret=True)
+    assert got.shape == (m,)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.rowwise_cosine_ref(a, b)),
+                               atol=1e-5)
+
+
 def test_semhash_uses_kernel_path():
     from repro.core import semhash
     xs = ["the quick brown fox", "a crime story", "N250m"]
