@@ -27,6 +27,7 @@ import sys
 from typing import Any, Dict, List, Optional
 
 from repro.core import backends as bk
+from repro.core import cost_model as cm
 from repro.core import executor as ex
 from repro.core import logical_optimizer as lopt
 from repro.core import physical_optimizer as popt
@@ -168,13 +169,18 @@ def run_nirvana(q, table, backends, perfect, *, logical=True, physical=True,
                 rules=None, estimator="approx", n_iterations=3, seed=0,
                 rewriter=None, batch_size=1, concurrency=16,
                 driver=None, coalesce=None, linger=None,
-                cascade=None) -> RunResult:
+                cascade=None, cost_model=None) -> RunResult:
     plan = q.plan_for(table)
     truth = truth_of(plan, table, perfect)
     router = None
     if CASCADE if cascade is None else cascade:
         from repro.core import cascade as casc
         router = casc.CascadeRouter(casc.EmbeddingBackend())
+    # a fresh calibrated cost model per run unless the caller supplies one
+    # to carry calibration across runs (latency_weight 0 = today's pure-USD
+    # choices; the executor's finalize sync points feed it measurements)
+    if cost_model is None:
+        cost_model = cm.CostModel()
     # one ExecutionContext for the whole pipeline (optimizers meter their
     # own phases; the final execution bills into ctx.meter)
     ctx = rt.ExecutionContext(backends=backends, default_tier="m*",
@@ -185,7 +191,8 @@ def run_nirvana(q, table, backends, perfect, *, logical=True, physical=True,
                               else coalesce,
                               linger_s=linger,
                               shards=SHARDS,
-                              cascade=router)
+                              cascade=router,
+                              cost_model=cost_model)
     opt_wall = opt_usd = 0.0
     lres = pres = None
     if logical:
@@ -289,8 +296,7 @@ def run_tablerag_analog(q, table, backends, perfect, k: int = 50
 def run_gpt_direct(q, table, backends, perfect) -> RunResult:
     """Whole-table-in-one-prompt: token count exceeds the context window on
     every benchmark table (the paper's X entries)."""
-    from repro.core import cost as cost_mod
-    tokens = sum(cost_mod.text_tokens(v) for c in table.columns
+    tokens = sum(cm.DEFAULT_MODEL.text_tokens(v) for c in table.columns
                  for v in table.columns[c])
     ok = tokens < GPT_CONTEXT_LIMIT
     return RunResult("gpt-direct", table.name, q.qid, q.size,

@@ -84,6 +84,9 @@ class UsageMeter:
         self.by_tier: Dict[str, Usage] = {}
         self.call_log: List[tuple] = []      # (tier_name, latency_s)
         self.call_keys: List[Optional[tuple]] = []   # parallel logical keys
+        # parallel (op_kind, tok_out_per_call) — CostModel.observe's food;
+        # call_log itself stays 2-tuples (the scheduler drain unpacks two)
+        self.call_ops: List[Optional[tuple]] = []
         self._lock = threading.Lock()
         self._local = threading.local()
 
@@ -100,18 +103,23 @@ class UsageMeter:
 
     def record(self, tier_name: str, usage: Usage,
                per_call_latency_s: Optional[Sequence[float]] = None,
-               key: Optional[tuple] = None):
+               key: Optional[tuple] = None,
+               op_kind: Optional[str] = None):
         if key is None:
             key = getattr(self._local, "key", None)
         if per_call_latency_s is None and usage.calls > 0:
             per_call_latency_s = [usage.latency_s / usage.calls] \
                 * usage.calls
+        op_info = None
+        if op_kind is not None and usage.calls > 0:
+            op_info = (op_kind, usage.tok_out / usage.calls)
         with self._lock:
             self.by_tier.setdefault(tier_name, Usage()).add(usage)
             for i, lat in enumerate(per_call_latency_s or ()):
                 self.call_log.append((tier_name, lat))
                 self.call_keys.append(None if key is None
                                       else tuple(key) + (i,))
+                self.call_ops.append(op_info)
 
     def absorb(self, other: "UsageMeter") -> "UsageMeter":
         """Add another meter's totals and call log into this one (shard
@@ -120,11 +128,14 @@ class UsageMeter:
             tiers = {t: dataclasses.replace(u)
                      for t, u in other.by_tier.items()}
             log, keys = list(other.call_log), list(other.call_keys)
+            ops = list(other.call_ops)
+            ops += [None] * (len(log) - len(ops))
         with self._lock:
             for t, u in tiers.items():
                 self.by_tier.setdefault(t, Usage()).add(u)
             self.call_log.extend(log)
             self.call_keys.extend(keys)
+            self.call_ops.extend(ops)
         return self
 
     @staticmethod
@@ -142,12 +153,14 @@ class UsageMeter:
                     out.by_tier.setdefault(tier, Usage()).add(u)
                 for pos, entry in enumerate(m.call_log):
                     k = m.call_keys[pos] if pos < len(m.call_keys) else None
+                    o = m.call_ops[pos] if pos < len(m.call_ops) else None
                     sort_key = (0, k) if k is not None else (1, (mi, pos))
-                    entries.append((sort_key, entry, k))
+                    entries.append((sort_key, entry, k, o))
         entries.sort(key=lambda e: e[0])
-        for _, entry, k in entries:
+        for _, entry, k, o in entries:
             out.call_log.append(entry)
             out.call_keys.append(k)
+            out.call_ops.append(o)
         return out
 
     @property
@@ -346,14 +359,16 @@ class SimulatedBackend:
                                 values=values)
             if meter:
                 meter.record(self.tier.name, usage,
-                             per_call_latency_s=self._per_call(usage))
+                             per_call_latency_s=self._per_call(usage),
+                             op_kind=op.kind)
             return [out]
         outs = [self._output(op, v, batch_size) for v in values]
         n_calls = max(1, (len(values) + batch_size - 1) // batch_size)
         usage = self._usage(op, n_calls=n_calls, values=values)
         if meter:
             meter.record(self.tier.name, usage,
-                         per_call_latency_s=self._per_call(usage))
+                         per_call_latency_s=self._per_call(usage),
+                         op_kind=op.kind)
         return outs
 
     @staticmethod

@@ -175,7 +175,7 @@ class EmbeddingBackend:
                              usd=self.tier.usd(tok_in, 0.0),
                              latency_s=modeled)
             meter.record(self.tier.name, usage,
-                         per_call_latency_s=[measured])
+                         per_call_latency_s=[measured], op_kind=op.kind)
         return [float(s) for s in sims]
 
 

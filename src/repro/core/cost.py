@@ -1,182 +1,50 @@
-"""Selectivity-based plan cost model + backend tier table (paper §3.1, §4).
+"""Deprecated shim over :mod:`repro.core.cost_model`.
 
-The paper's estimator "tracks the number of processed data items and prompt
-lengths per operator"; total plan cost is the sum of operator costs, with
-record counts flowing through per-operator selectivities (filter 0.5,
-reduce 0, others 1; fused filters 0.5/k).
-
-Two cost axes are reported everywhere:
-  usd        monetary cost from per-tier token prices (mirrors the GPT-4.1
-             family price card so Table-4-shaped numbers are reproducible)
-  latency_s  simulated wall-clock: per-call overhead + per-token decode time,
-             scheduled over `concurrency` parallel workers (the paper uses
-             16 coroutines)
-
-plus the hardware-grounded axis the paper cannot see:
-  chip_s     FLOPs / (MFU * peak) for tiers backed by a JAX-served arch.
+All cost estimation lives on :class:`repro.core.cost_model.CostModel`
+now — tier specs, token priors, ``op_cost``/``plan_cost``, plus the
+online calibration and makespan estimation the free functions never had.
+This module keeps the seed-era surface importable: the data structures
+are re-exported and the free functions delegate to
+:data:`cost_model.DEFAULT_MODEL` (which is never calibrated, so these
+stay byte-stable). New code should take an explicit ``CostModel``
+(usually ``ExecutionContext.cost_model``) instead of importing from here.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Dict, Iterable, Optional, Sequence
+from typing import Dict, Optional
 
 from repro.core import plan as plan_ir
-
-TOKENS_PER_CHAR = 0.25   # ~4 chars/token
+from repro.core.cost_model import (   # noqa: F401  (re-exported surface)
+    DEFAULT_MODEL,
+    DEFAULT_TIERS,
+    EMBED_ROW_S,
+    EMBED_TIER,
+    EMBED_TIER_NAME,
+    OUT_TOKENS,
+    OpCost,
+    PlanCost,
+    TIER_ORDER,
+    TOKENS_PER_CHAR,
+    TierSpec,
+    chip_seconds,
+)
 
 
 def text_tokens(text) -> float:
-    return max(1.0, len(str(text)) * TOKENS_PER_CHAR)
-
-
-# ---------------------------------------------------------------------------
-# Backend tiers (m1 < m2 < m3 < m*) — §4's four-model setting
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class TierSpec:
-    name: str
-    capability: float            # P(correct) scale for the simulator
-    usd_per_m_in: float
-    usd_per_m_out: float
-    latency_call_s: float        # per-call overhead (network + queue)
-    latency_tok_s: float         # per output token
-    arch: Optional[str] = None   # JAX model zoo id backing this tier
-
-    def usd(self, tok_in: float, tok_out: float) -> float:
-        return (tok_in * self.usd_per_m_in
-                + tok_out * self.usd_per_m_out) / 1e6
-
-    def latency(self, tok_out: float) -> float:
-        return self.latency_call_s + tok_out * self.latency_tok_s
-
-
-# price card mirrors OpenAI's GPT-4.1 family (paper §5.1.4); capabilities are
-# the simulator's knobs calibrated so Table-2-style alignment stats reproduce
-# (misaligned fraction ~0.15 on a hard map; see benchmarks/table2).
-DEFAULT_TIERS: Dict[str, TierSpec] = {
-    "m1": TierSpec("m1", 0.88, 0.10, 0.40, 0.35, 0.004, arch="qwen2-0.5b"),
-    "m2": TierSpec("m2", 0.92, 0.15, 0.60, 0.45, 0.006,
-                   arch="granite-moe-1b-a400m"),
-    "m3": TierSpec("m3", 0.96, 0.40, 1.60, 0.60, 0.010, arch="minicpm3-4b"),
-    "m*": TierSpec("m*", 0.99, 2.00, 8.00, 0.90, 0.022,
-                   arch="codeqwen1.5-7b"),
-}
-TIER_ORDER = ("m1", "m2", "m3", "m*")
-
-# tier-0 embedding pass (core.cascade): one batched Pallas kernel launch
-# scores a whole morsel, so the per-row price is ~1000x below m1's and the
-# "per-call" latency is a kernel launch, not a network round trip. Not part
-# of TIER_ORDER — it cannot answer an operator alone; it only *routes*
-# (cascade bands decide pass/drop, the uncertain band escalates to an LLM
-# tier), so improvement-score tier selection never assigns it directly.
-EMBED_TIER_NAME = "tier0-embed"
-EMBED_ROW_S = 2e-6              # modeled per-row device time
-EMBED_TIER = TierSpec(EMBED_TIER_NAME, 0.0, 0.0001, 0.0, 0.002, 0.0)
+    return DEFAULT_MODEL.text_tokens(text)
 
 
 def tier_list(tiers: Optional[Dict[str, TierSpec]] = None):
-    t = tiers or DEFAULT_TIERS
-    return [t[k] for k in TIER_ORDER if k in t]
-
-
-# output length model per operator kind (tokens per record)
-OUT_TOKENS = {plan_ir.FILTER: 2.0, plan_ir.MAP: 24.0, plan_ir.REDUCE: 16.0,
-              plan_ir.RANK: 6.0}
-
-
-# ---------------------------------------------------------------------------
-# Cost records
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class OpCost:
-    llm_calls: float = 0.0
-    tok_in: float = 0.0
-    tok_out: float = 0.0
-    usd: float = 0.0
-    latency_s: float = 0.0       # sequential latency of this op's calls
-    rows_in: float = 0.0
-    rows_out: float = 0.0
-
-
-@dataclasses.dataclass
-class PlanCost:
-    per_op: list
-    llm_calls: float = 0.0
-    tok_in: float = 0.0
-    tok_out: float = 0.0
-    usd: float = 0.0
-    latency_s: float = 0.0       # wall-clock under `concurrency`
-    rows_processed: float = 0.0  # paper Fig. 10/13 metric
-
-    @property
-    def cost(self) -> float:
-        """The scalar the logical optimizer minimizes (Alg. 1 line 9)."""
-        return self.usd
-
-    def describe(self) -> str:
-        return (f"calls={self.llm_calls:.0f} tok_in={self.tok_in:.0f} "
-                f"usd={self.usd:.4f} latency={self.latency_s:.1f}s "
-                f"rows={self.rows_processed:.0f}")
+    return DEFAULT_MODEL.tier_list(tiers)
 
 
 def op_cost(op: plan_ir.Operator, rows_in: float, tier: TierSpec,
             avg_value_tokens: float = 60.0,
             concurrency: int = 1, batch_size: int = 1,
             cascade_escalate: Optional[float] = None) -> OpCost:
-    """Cost of one operator over `rows_in` records.
-
-    LLM ops: ``ceil(rows / batch_size)`` calls — the executor's batch
-    coalescer packs surviving rows across morsel boundaries, so the model
-    prices whole-table batching, not per-morsel ragged ceilings. Batched
-    records share the instruction prompt and the call's output budget.
-    (Reduce: hierarchical tree over batches of ~32 values per call.)
-    UDF ops: zero LLM cost, negligible latency.
-
-    ``cascade_escalate`` prices a tier-0 embedding cascade on this
-    operator (``core.cascade``): one batched kernel pass scores every row
-    (EMBED_TIER prices + a launch latency), and only the escalated
-    fraction reaches the LLM tier — ``ceil(rows * frac / batch)`` calls
-    instead of ``ceil(rows / batch)``.
-    """
-    rows_out = rows_in * op.selectivity if op.kind == plan_ir.FILTER \
-        else (1.0 if op.kind == plan_ir.REDUCE else rows_in)
-    c = OpCost(rows_in=rows_in, rows_out=rows_out)
-    if not op.is_llm:
-        c.latency_s = rows_in * 2e-6
-        return c
-    ins_tok = text_tokens(op.instruction)
-    if op.kind == plan_ir.REDUCE:
-        batch = 32.0
-        calls = 0.0
-        level = rows_in
-        while level > 1.0:
-            level = math.ceil(level / batch)
-            calls += level
-        calls = max(calls, 1.0)
-        c.llm_calls = calls
-        c.tok_in = calls * (ins_tok + batch * avg_value_tokens * 0.5)
-        c.tok_out = calls * OUT_TOKENS[op.kind]
-    else:
-        b = max(1, int(batch_size))
-        llm_rows = rows_in
-        if cascade_escalate is not None:
-            llm_rows = rows_in * min(max(cascade_escalate, 0.0), 1.0)
-        calls = math.ceil(llm_rows / b) if llm_rows > 0 else 0.0
-        c.llm_calls = float(calls)
-        c.tok_in = calls * ins_tok + llm_rows * avg_value_tokens
-        c.tok_out = calls * OUT_TOKENS[op.kind]
-    c.usd = tier.usd(c.tok_in, c.tok_out)
-    per_call_out = c.tok_out / max(c.llm_calls, 1.0)
-    c.latency_s = c.llm_calls * tier.latency(per_call_out)
-    if cascade_escalate is not None and op.kind != plan_ir.REDUCE:
-        # the device pass itself: every row is embedded and scored in one
-        # batched kernel launch, billed under the tier-0 price card
-        c.usd += EMBED_TIER.usd(rows_in * avg_value_tokens, 0.0)
-        c.latency_s += EMBED_TIER.latency_call_s + rows_in * EMBED_ROW_S
-    return c
+    return DEFAULT_MODEL.op_cost(
+        op, rows_in, tier, avg_value_tokens, concurrency=concurrency,
+        batch_size=batch_size, cascade_escalate=cascade_escalate)
 
 
 def plan_cost(plan: plan_ir.LogicalPlan, n_rows: int,
@@ -186,47 +54,7 @@ def plan_cost(plan: plan_ir.LogicalPlan, n_rows: int,
               concurrency: int = 16, batch_size: int = 1,
               shards: int = 1,
               cascade: Optional[Dict[int, float]] = None) -> PlanCost:
-    """Estimate a full plan: record counts flow through selectivities.
-
-    ``concurrency`` is one shard worker's replica width; ``shards``
-    multiplies it (morsel-parallel sharded execution runs a
-    pool-per-(shard, tier), so un-quota'd effective width is
-    ``concurrency * shards`` — matching ``ShardedDispatcher``).
-
-    ``cascade`` maps op index -> expected escalation fraction for
-    operators running behind a tier-0 embedding cascade (see ``op_cost``);
-    ``rows_processed`` then counts only the escalated (LLM-seen) rows —
-    the Fig. 13 metric the cascade is built to shrink."""
-    tiers = tiers or DEFAULT_TIERS
-    rows = float(n_rows)
-    total = PlanCost(per_op=[])
-    width = max(1, int(concurrency)) * max(1, int(shards))
-    for k, op in enumerate(plan.ops):
-        tier = tiers[op.tier or default_tier]
-        esc = None if cascade is None else cascade.get(k)
-        c = op_cost(op, rows, tier, avg_value_tokens,
-                    batch_size=batch_size, cascade_escalate=esc)
-        total.per_op.append(c)
-        total.llm_calls += c.llm_calls
-        total.tok_in += c.tok_in
-        total.tok_out += c.tok_out
-        total.usd += c.usd
-        # ops execute in sequence; each op's calls run `width`-wide
-        total.latency_s += c.latency_s / width
-        if op.is_llm:
-            total.rows_processed += c.rows_in if esc is None \
-                else c.rows_in * min(max(esc, 0.0), 1.0)
-        rows = c.rows_out
-    return total
-
-
-# ---------------------------------------------------------------------------
-# Hardware-grounded cost (beyond-paper axis)
-# ---------------------------------------------------------------------------
-
-def chip_seconds(tok_in: float, tok_out: float, active_params: float,
-                 mfu: float = 0.4, peak_flops: float = 197e12) -> float:
-    """Approximate chip-seconds to serve the tokens on a TPU v5e chip:
-    prefill 2*N*T_in + decode 2*N*T_out FLOPs at `mfu` utilization."""
-    flops = 2.0 * active_params * (tok_in + tok_out)
-    return flops / (mfu * peak_flops)
+    return DEFAULT_MODEL.plan_cost(
+        plan, n_rows, tiers=tiers, default_tier=default_tier,
+        avg_value_tokens=avg_value_tokens, concurrency=concurrency,
+        batch_size=batch_size, shards=shards, cascade=cascade)

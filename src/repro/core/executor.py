@@ -447,6 +447,13 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
         # finalize is per-execution, not terminal — a shared dispatcher
         # keeps serving other in-flight queries' staging untouched.
         disp.finalize(meter)
+        # calibration sync point: the meter's call log is complete for
+        # this execution and (when sharded) deterministically merged, so
+        # the cost model may fold it in now — never mid-execution. The
+        # per-meter cursor makes this idempotent if an outer layer (e.g.
+        # the query server) observes the same meter again.
+        if ctx.cost_model is not None:
+            ctx.cost_model.observe(meter)
         if query_key is not None:
             disp.release_query(query_key)
     return ExecutionResult(

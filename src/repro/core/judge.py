@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core import backends as bk
 from repro.core import cost as cost_mod
+from repro.core import cost_model
 from repro.core import executor as ex
 from repro.core import plan as plan_ir
 from repro.core import runtime as rt
@@ -141,13 +142,16 @@ class Judge:
             rating = _table_similarity(ra.table, rb.table, sorted(produced))
             detail = (f"rows {ra.table.n_rows} vs {rb.table.n_rows}")
 
-        # the rating itself is one judge-LLM call over both rendered outputs
-        tier = cost_mod.DEFAULT_TIERS[self.judge_tier]
-        tok_in = 200.0 + 40.0 * sample.n_rows
+        # the rating itself is one judge-LLM call over both rendered
+        # outputs, priced by the context's cost model (tiers + the judge
+        # prompt-length rule live there so a calibrated serve re-prices it)
+        model = self.ctx.cost_model or cost_model.DEFAULT_MODEL
+        tier = model.tiers[self.judge_tier]
+        tok_in = model.judge_tokens(sample.n_rows)
         usage = bk.Usage(calls=1, tok_in=tok_in, tok_out=4.0,
                          usd=tier.usd(tok_in, 4.0),
                          latency_s=tier.latency(4.0))
-        meter.record(self.judge_tier, usage)
+        meter.record(self.judge_tier, usage, op_kind="judge")
         # execution + judging both contribute to verification wall-clock;
         # the shared dispatcher's wall covers both sample runs (modeled
         # makespan under the simulated driver, measured under threads)

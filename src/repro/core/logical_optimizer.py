@@ -24,7 +24,7 @@ import random
 from typing import Dict, List, Optional, Sequence
 
 from repro.core import backends as bk
-from repro.core import cost as cost_mod
+from repro.core import cost_model
 from repro.core import judge as judge_mod
 from repro.core import plan as plan_ir
 from repro.core import rewriter as rw
@@ -112,14 +112,18 @@ def optimize(plan: plan_ir.LogicalPlan, table: Table,
     meter = bk.UsageMeter()
     wall = 0.0
 
+    model = ctx.cost_model or cost_model.DEFAULT_MODEL
+
     def plan_cost_of(p: plan_ir.LogicalPlan) -> float:
         # batch-aware: candidate costs price ceil(rows/batch) coalesced
-        # calls, so rewrites are judged at the batch size they will run at
-        return cost_mod.plan_cost(p, table.n_rows,
-                                  default_tier=ctx.default_tier,
-                                  concurrency=ctx.concurrency,
-                                  batch_size=ctx.batch_size,
-                                  shards=ctx.shards).cost
+        # calls, so rewrites are judged at the batch size they will run
+        # at. The context's CostModel supplies the (possibly calibrated)
+        # estimates and the objective — pure USD at latency_weight=0,
+        # USD + makespan-equivalent otherwise.
+        return model.objective(model.plan_cost(
+            p, table.n_rows, default_tier=ctx.default_tier,
+            concurrency=ctx.concurrency, batch_size=ctx.batch_size,
+            shards=ctx.shards))
 
     c0 = plan_cost_of(plan)
     cands: List[Candidate] = [Candidate(plan, c0, 1.0, None, "init")]
@@ -182,12 +186,13 @@ def optimize_beam(plan: plan_ir.LogicalPlan, table: Table,
     meter = bk.UsageMeter()
     wall = 0.0
 
+    model = ctx.cost_model or cost_model.DEFAULT_MODEL
+
     def plan_cost_of(p):
-        return cost_mod.plan_cost(p, table.n_rows,
-                                  default_tier=ctx.default_tier,
-                                  concurrency=ctx.concurrency,
-                                  batch_size=ctx.batch_size,
-                                  shards=ctx.shards).cost
+        return model.objective(model.plan_cost(
+            p, table.n_rows, default_tier=ctx.default_tier,
+            concurrency=ctx.concurrency, batch_size=ctx.batch_size,
+            shards=ctx.shards))
 
     c0 = plan_cost_of(plan)
     cands: List[Candidate] = [Candidate(plan, c0, 1.0, None, "init")]

@@ -35,6 +35,7 @@ from typing import Dict, List, Optional
 
 from repro.core import backends as bk
 from repro.core import cascade as casc_mod
+from repro.core import cost_model as cm
 from repro.core import executor as ex
 from repro.core import improvement as imp
 from repro.core import plan as plan_ir
@@ -58,6 +59,10 @@ class PhysicalOptConfig:
     # calibrating a tier-0 cascade (ctx.cascade is set): larger margins
     # escalate more rows
     cascade_margin: float = 0.02
+    # cost x makespan weight for tier selection; None = inherit from the
+    # context's CostModel (the library default model's weight is 0, which
+    # reproduces pure improvement-margin selection exactly)
+    latency_weight: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -73,13 +78,23 @@ class PhysicalOptResult:
 
 
 def select_tier(scores: Dict[str, float], delta_min: float,
-                order=("m2", "m3", "m*")) -> str:
+                order=("m2", "m3", "m*"),
+                penalty: Optional[Dict[str, float]] = None) -> str:
     """Algorithm 2's greedy upgrade: start at m1, upgrade tier-by-tier while
-    the marginal improvement I_curr - I_last exceeds the margin."""
+    the marginal improvement I_curr - I_last exceeds the margin.
+
+    ``penalty`` (scheduler-aware mode) charges each candidate a
+    cost x makespan handicap in improvement-score units: an upgrade must
+    clear ``delta_min`` *plus* the candidate's penalty increase over the
+    incumbent. ``None`` (the default, and always the case at
+    ``latency_weight=0``) is byte-identical to the classic walk."""
     chosen, i_last = "m1", 0.0
     for m in order:
         i_curr = scores[m]
-        if i_curr - i_last >= delta_min:
+        need = delta_min
+        if penalty is not None:
+            need += penalty.get(m, 0.0) - penalty.get(chosen, 0.0)
+        if i_curr - i_last >= need:
             chosen, i_last = m, i_curr
     return chosen
 
@@ -102,17 +117,53 @@ def optimize(plan: plan_ir.LogicalPlan, table: Table,
         dispatcher = ctx.fork(**over).make_dispatcher() if over \
             else ctx.make_dispatcher()
     try:
-        return _optimize(plan, sample, ctx, cfg, meter, dispatcher)
+        return _optimize(plan, sample, ctx, cfg, meter, dispatcher,
+                         n_rows=table.n_rows)
     finally:
         if owns_dispatcher:
             dispatcher.close()
 
 
-def _optimize(plan, sample, ctx, cfg, meter, disp) -> PhysicalOptResult:
+def _tier_penalty(model, op, n_rows, ctx, disp,
+                  weight: float) -> Optional[Dict[str, float]]:
+    """Scheduler-aware handicap per candidate tier, in improvement-score
+    units: each tier's full-table USD and makespan (event-scheduler replay
+    seeded with the dispatcher's current pool occupancy, so a busy tier
+    looks slower than an idle one), normalized by the worst candidate and
+    scaled by ``weight``. At weight 0 there is no penalty (None) and
+    ``select_tier`` runs its classic walk."""
+    if weight <= 0:
+        return None
+    occ = disp.occupancy() if disp is not None else {}
+    usd: Dict[str, float] = {}
+    mk: Dict[str, float] = {}
+    for m in cm.TIER_ORDER:
+        if m not in model.tiers:
+            continue
+        c = model.op_cost(op, float(n_rows), model.tiers[m],
+                          batch_size=ctx.batch_size)
+        usd[m] = c.usd
+        mk[m] = model.op_makespan(
+            op, float(n_rows), m, batch_size=ctx.batch_size,
+            concurrency=ctx.concurrency, shards=ctx.shards,
+            per_tier=ctx.per_tier_concurrency, occupancy=occ)
+    umax = max(usd.values()) or 1.0
+    mmax = max(mk.values()) or 1.0
+    return {m: weight * 0.5 * (usd[m] / umax + mk[m] / mmax)
+            for m in usd}
+
+
+def _optimize(plan, sample, ctx, cfg, meter, disp,
+              n_rows: Optional[int] = None) -> PhysicalOptResult:
     cursor = 0
     assignments: Dict[int, str] = {}
     all_scores: Dict[int, Dict[str, float]] = {}
     cascades: Dict[int, dict] = {}
+    model = ctx.cost_model or cm.DEFAULT_MODEL
+    weight = cfg.latency_weight if cfg.latency_weight is not None \
+        else model.latency_weight
+    if n_rows is None:
+        n_rows = sample.n_rows
 
     cur = sample
     for k, op in enumerate(plan.ops):
@@ -136,7 +187,9 @@ def _optimize(plan, sample, ctx, cfg, meter, disp) -> PhysicalOptResult:
                     store, max_cond_eval=cfg.max_cond_eval)
             else:
                 res = imp.ESTIMATORS[cfg.estimator](store)
-            tier = select_tier(res.scores, cfg.delta_min)
+            tier = select_tier(res.scores, cfg.delta_min,
+                               penalty=_tier_penalty(model, op, n_rows,
+                                                     ctx, disp, weight))
             assignments[k] = tier
             all_scores[k] = dict(res.scores)
             adopted = _calibrate_cascade(ctx, cfg, op, values, store, tier,

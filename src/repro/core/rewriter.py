@@ -25,6 +25,7 @@ from typing import Callable, Optional, Sequence, Tuple
 
 from repro.core import backends as bk
 from repro.core import cost as cost_mod
+from repro.core import cost_model as cm
 from repro.core import plan as plan_ir
 from repro.core import rules as rules_mod
 
@@ -74,6 +75,9 @@ class GreedyRuleRewriter:
     n_rows: int = 1000            # cost-model table size for gain estimates
     tier: cost_mod.TierSpec = dataclasses.field(
         default_factory=lambda: cost_mod.DEFAULT_TIERS["m*"])
+    # gain estimates price through this model when set (e.g. a serve
+    # loop's calibrated instance); None = the uncalibrated default
+    cost_model: Optional[cm.CostModel] = None
 
     def rewrite(self, plan: plan_ir.LogicalPlan,
                 rng: random.Random) -> RewriteOutcome:
@@ -81,11 +85,13 @@ class GreedyRuleRewriter:
         cands = rules_mod.all_candidates(plan, self.rule_names)
         if not cands:
             return RewriteOutcome(None, None, usage)
-        base = cost_mod.plan_cost(plan, self.n_rows).cost
+        model = self.cost_model or cm.DEFAULT_MODEL
+        base = model.objective(model.plan_cost(plan, self.n_rows))
         best, best_gain = None, -1e30
         for c in cands:
             try:
-                gain = base - cost_mod.plan_cost(c.apply(), self.n_rows).cost
+                gain = base - model.objective(
+                    model.plan_cost(c.apply(), self.n_rows))
             except Exception:
                 continue
             if gain > best_gain:

@@ -615,6 +615,13 @@ class Dispatcher:
     def done(self, value, finish: float = 0.0) -> _DoneTask:
         return _DoneTask(value, finish)
 
+    def occupancy(self) -> Dict[str, List[float]]:
+        """Per-tier busy-until offsets (seconds of remaining work per
+        occupied worker slot) for seeding a ``CostModel`` makespan replay.
+        Empty on dispatchers with no cheap occupancy signal — an empty
+        seed just means the replay assumes idle pools."""
+        return {}
+
     def fanout(self, tier_name: str) -> Optional[Callable]:
         """Per-tier call fanout for :func:`run_backend_calls`; None means
         run inline (sequential)."""
@@ -663,6 +670,19 @@ class SimulatedDispatcher(Dispatcher):
         cursor, _ = self.sched.drain(meter, cursor)
         self.sched.barrier()
         return cursor
+
+    def occupancy(self) -> Dict[str, List[float]]:
+        sched = self.sched
+        with sched._elock:
+            now = sched._floor
+            out: Dict[str, List[float]] = {}
+            for key, pool in sched._pools.items():
+                if key in (HOST_TIER, "\x00sync"):
+                    continue
+                busy = [t - now for t in pool if t > now]
+                if busy:
+                    out[key] = sorted(busy)
+            return out
 
     @property
     def wall_s(self) -> float:
@@ -1259,6 +1279,14 @@ class ExecutionContext:
     shard_cache: str = "shared"
     cascade: Optional[Any] = None
     cache: Optional[OutputCache] = None
+    # the calibrated estimation surface (core.cost_model.CostModel) this
+    # execution's optimizers price with and the executor's finalize sync
+    # point feeds (CostModel.observe). None = uncalibrated library default
+    # (cost_model.DEFAULT_MODEL) for pricing, and no observation — the
+    # default model must stay byte-stable, so it is never fed implicitly.
+    # Typed Any only to keep dataclass field ordering simple; forks share
+    # the instance, so a judge's sample runs calibrate the same model.
+    cost_model: Optional[Any] = None
     meter: bk.UsageMeter = dataclasses.field(default_factory=bk.UsageMeter)
     # long-lived dispatcher owned by this context (see dispatcher()/close();
     # init=False fields are NOT carried across fork(), so every fork starts

@@ -111,7 +111,7 @@ class JAXBackend:
                 calls=len(prompts), tok_in=tok_in, tok_out=tok_out,
                 usd=self.tier.usd(tok_in, tok_out),
                 latency_s=sum(per_call)),
-                per_call_latency_s=per_call)
+                per_call_latency_s=per_call, op_kind=op.kind)
 
         if self.oracle is not None:
             if op.kind == plan_ir.REDUCE:

@@ -173,12 +173,19 @@ class QueryServer:
                              query_key=handle.qid)
         except BaseException as e:
             handle.finished_s = time.perf_counter()
-            # failed queries still billed whatever ran before the error
+            # failed queries still billed whatever ran before the error —
+            # and still observed: per-query finalize is a calibration sync
+            # point (idempotent via the model's per-meter cursor, so the
+            # executor's own observe of the same meter is not re-counted)
+            if self.ctx.cost_model is not None:
+                self.ctx.cost_model.observe(handle.meter)
             self.ctx.meter.absorb(handle.meter)
             handle._fut.set_exception(e)
             self._retire(handle, failed=True)
         else:
             handle.finished_s = time.perf_counter()
+            if self.ctx.cost_model is not None:
+                self.ctx.cost_model.observe(handle.meter)
             self.ctx.meter.absorb(handle.meter)
             handle._fut.set_result(res)
             self._retire(handle, failed=False)

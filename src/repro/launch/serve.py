@@ -77,7 +77,7 @@ def _semantic_context(args):
     the other tiers stay simulated."""
     from repro.core import backends as bk
     from repro.core import runtime as rt
-    from repro.core.cost import DEFAULT_TIERS
+    from repro.core.cost_model import DEFAULT_TIERS, CostModel
     from repro.data import load_dataset
     from repro.engine.jax_backend import JAXBackend
 
@@ -97,6 +97,10 @@ def _semantic_context(args):
         router = casc_mod.CascadeRouter(
             default_bands=casc_mod.CascadeBands(lo=args.cascade_lo,
                                                 hi=args.cascade_hi))
+    # one calibrated cost model per process: the executor/server observe
+    # sync points feed it measured per-call latencies, and --explain-cost
+    # prints its q-error table after the run
+    model = CostModel(latency_weight=args.latency_weight)
     ctx = rt.ExecutionContext(backends=backends, default_tier="m1",
                               concurrency=args.slots,
                               morsel_size=args.slots * 4,
@@ -105,8 +109,21 @@ def _semantic_context(args):
                               coalesce=args.coalesce,
                               linger_s=args.linger,
                               shards=args.shards,
-                              cascade=router)
+                              cascade=router,
+                              cost_model=model)
     return table, cfg, engine, ctx
+
+
+def _explain_cost(args, ctx):
+    """--explain-cost: print the calibrated model's per-(op, tier)
+    q-error table after the run (predictions vs the measured call log
+    ingested at the observe sync points)."""
+    if not args.explain_cost or ctx.cost_model is None:
+        return
+    from repro.analysis import qerror
+    print("[serve] cost-model calibration (q-error = max(pred/meas, "
+          "meas/pred)):")
+    print(qerror.render_text(ctx.cost_model))
 
 
 def serve_semantic(args):
@@ -118,7 +135,9 @@ def serve_semantic(args):
 
     table, cfg, engine, ctx = _semantic_context(args)
     if args.serve > 0:
-        return serve_queries(args, table, cfg, engine, ctx)
+        out = serve_queries(args, table, cfg, engine, ctx)
+        _explain_cost(args, ctx)
+        return out
     q = WORKLOADS[args.semantic][0]
     print(f"[serve] semantic query {q.qid} over {table.name} "
           f"({table.n_rows} rows), m1 = {cfg.name} on {args.slots} slots, "
@@ -145,6 +164,7 @@ def serve_semantic(args):
         print(f"[serve] cascade stats={res.cascade_stats}")
     print(f"[serve] engine stats={engine.stats} "
           f"occupancy={engine.occupancy:.2f}")
+    _explain_cost(args, ctx)
     return res
 
 
@@ -268,6 +288,17 @@ def build_parser() -> argparse.ArgumentParser:
                     help="--serve: Poisson-ish mean inter-admission gap "
                          "in seconds (seeded explicit offsets; 0 = admit "
                          "all queries at once)")
+    ap.add_argument("--latency-weight", type=float, default=0.0,
+                    help="--semantic: cost x makespan weight on the "
+                         "context's CostModel — 0 (default) optimizes "
+                         "pure USD exactly as before; > 0 mixes an "
+                         "event-scheduler makespan estimate into both "
+                         "optimizers' objectives")
+    ap.add_argument("--explain-cost", action="store_true",
+                    help="--semantic: after the run, print the cost "
+                         "model's per-(op, tier) q-error table "
+                         "(predicted vs measured latency/tokens from "
+                         "online calibration)")
     return ap
 
 

@@ -200,5 +200,6 @@ class SleepBackend:
                          bk.Usage(calls=n_calls, tok_in=8.0 * len(values),
                                   tok_out=4.0 * n_calls, usd=0.0,
                                   latency_s=self.delay_s * n_calls),
-                         per_call_latency_s=[self.delay_s] * n_calls)
+                         per_call_latency_s=[self.delay_s] * n_calls,
+                         op_kind=op.kind)
         return outs
