@@ -1,0 +1,161 @@
+"""Fault-tolerance benchmark — goodput under injected transient failures.
+
+A fleet of independent queries runs three times over the same seeded
+10%-transient-failure fault plan (``testing.FlakyBackend``, whose draws
+are a pure function of the logical call key, so every mode sees the
+*same* faults on the same calls):
+
+* **fault-free**: no faults injected — the reference results and bill;
+* **fail-fast**: faults on, no :class:`runtime.CallPolicy` — today's
+  pre-policy behavior, where one transient error anywhere in a query
+  poisons the whole query;
+* **retry**: faults on, ``CallPolicy(retries=2)`` — the dispatcher
+  retries faulted attempts under deterministic retry-marked logical
+  keys.
+
+Goodput = completed queries / admitted queries. Acceptance (raises
+AssertionError otherwise):
+
+* retry-mode goodput == 1.0 and every retried query's results are
+  byte-identical to its fault-free run;
+* fail-fast goodput < 1.0 on the same plan (the faults were real);
+* retry-mode overhead is bounded: billed calls grow by exactly the
+  number of faulted attempts (each fault = one extra logged call).
+
+Writes ``artifacts/bench/BENCH_fault.json`` (one row per mode) and a
+repo-root ``BENCH_fault.json`` summary for the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import backends as bk
+from repro.core import executor as ex
+from repro.core import runtime as rt
+from repro.core.backends import SimulatedBackend
+from repro.core.cost import TierSpec
+from repro.testing import (FlakyBackend, KindOracle, result_fingerprint,
+                           tagged_plan, tagged_table)
+
+BATCH = 4
+MORSEL = 8
+ERROR_RATE = 0.10
+SEED = 11
+ROOT_SUMMARY = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_fault.json")
+
+
+def _backend(error_rate: float = 0.0):
+    spec = TierSpec("m*", 1.01, 2.0, 8.0, 0.01, 0.0)
+    inner = SimulatedBackend(spec, KindOracle(), violation_rate=0.0)
+    if error_rate <= 0.0:
+        return inner
+    return FlakyBackend(inner, error_rate=error_rate, seed=SEED)
+
+
+def _queries(n_queries: int, n_rows: int):
+    return [(f"fq{i:02d}", tagged_plan(f"fq{i:02d}", reduce_tail=i % 3 == 0),
+             tagged_table(f"fq{i:02d}", n_rows)) for i in range(n_queries)]
+
+
+def _run_mode(queries, *, error_rate: float, policy):
+    """Run every query under one shared fault plan; returns per-query
+    outcomes plus fleet-level accounting. ``query_key=tag`` scopes the
+    logical meter keys per query, so each query draws its own slice of
+    the fault plan (and the same slice in every mode)."""
+    completed, failed, fingerprints = 0, 0, {}
+    calls = usd = 0.0
+    backend = _backend(error_rate)
+    t0 = time.perf_counter()
+    for tag, plan, table in queries:
+        meter = bk.UsageMeter()
+        try:
+            res = ex.execute(plan, table, {"m*": backend},
+                             default_tier="m*", batch_size=BATCH,
+                             morsel_size=MORSEL, meter=meter,
+                             call_policy=policy, query_key=tag)
+        except rt.TransientCallError:
+            failed += 1
+            fingerprints[tag] = None
+        else:
+            completed += 1
+            fingerprints[tag] = result_fingerprint(res)
+        calls += meter.total.calls
+        usd += meter.total.usd
+    wall = time.perf_counter() - t0
+    faults = getattr(backend, "faults_injected", 0)
+    return {"completed": completed, "failed": failed,
+            "goodput": completed / max(1, len(queries)),
+            "calls": int(calls),
+            "usd": round(usd, 6),
+            "faults_injected": faults,
+            "wall_s": round(wall, 4)}, fingerprints
+
+
+def run(n_queries: int = 24, n_rows: int = 32):
+    queries = _queries(n_queries, n_rows)
+    modes = [
+        ("fault-free", 0.0, None),
+        ("fail-fast", ERROR_RATE, None),
+        ("retry", ERROR_RATE, rt.CallPolicy(retries=2)),
+    ]
+    rows, prints = [], {}
+    for mode, rate, policy in modes:
+        stats, fps = _run_mode(queries, error_rate=rate, policy=policy)
+        stats.update({"mode": mode, "error_rate": rate,
+                      "queries": n_queries})
+        rows.append(stats)
+        prints[mode] = fps
+
+    by_mode = {r["mode"]: r for r in rows}
+    base, ff, retry = (by_mode["fault-free"], by_mode["fail-fast"],
+                       by_mode["retry"])
+    if retry["goodput"] != 1.0:
+        raise AssertionError(
+            f"retry goodput {retry['goodput']} != 1.0")
+    if prints["retry"] != prints["fault-free"]:
+        raise AssertionError("retried results diverged from fault-free")
+    if ff["goodput"] >= 1.0:
+        raise AssertionError(
+            "fail-fast lost no queries: the fault plan injected nothing")
+    # exactly-once billing + one extra logged call per faulted attempt
+    if retry["calls"] != base["calls"] + retry["faults_injected"]:
+        raise AssertionError(
+            f"retry billed {retry['calls']} calls, expected "
+            f"{base['calls']} + {retry['faults_injected']} faults")
+
+    summary = {
+        "mode": "summary", "queries": n_queries,
+        "error_rate": ERROR_RATE,
+        "goodput_fail_fast": round(ff["goodput"], 4),
+        "goodput_retry": round(retry["goodput"], 4),
+        "faults_injected": retry["faults_injected"],
+        "usd_fault_free": base["usd"],
+        "usd_retry": retry["usd"],
+        "retry_usd_overhead_pct": round(
+            100.0 * (retry["usd"] / base["usd"] - 1.0), 2)
+        if base["usd"] else 0.0,
+        "results_identical": True,
+    }
+    rows.append(summary)
+
+    from benchmarks import common
+    common.emit("BENCH_fault", rows)
+    with open(ROOT_SUMMARY, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(common.fmt_table(
+        [r for r in rows if r["mode"] != "summary"],
+        ["mode", "error_rate", "queries", "completed", "failed",
+         "goodput", "calls", "faults_injected", "usd"]))
+    print(f"[bench_fault] goodput at {ERROR_RATE:.0%} transient failures: "
+          f"fail-fast {ff['goodput']:.2f} -> retry "
+          f"{retry['goodput']:.2f} "
+          f"(+{summary['retry_usd_overhead_pct']}% spend, results "
+          f"byte-identical to fault-free)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

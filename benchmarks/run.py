@@ -42,7 +42,7 @@ def write_trajectory() -> dict:
           file=sys.stderr)
     return doc
 from benchmarks import (appendix_d_search, bench_cascade, bench_coalesce,
-                        bench_serve, bench_shard,
+                        bench_fault, bench_serve, bench_shard,
                         fig9_fig10_breakdown,
                         fig13_cardinality, fig14_batch_prompting,
                         roofline_report, table2_capability,
@@ -59,6 +59,8 @@ BENCHES = [
         sleep_s=0.03 if q else 0.05)),
     ("bench_cascade", lambda q: bench_cascade.run(
         n_rows=128 if q else 256)),
+    ("bench_fault", lambda q: bench_fault.run(
+        n_queries=12 if q else 24, n_rows=24 if q else 32)),
     ("table2_capability", lambda q: table2_capability.run(
         n=200 if q else 500)),
     ("table4_runtime_cost", lambda q: table4_runtime_cost.run(

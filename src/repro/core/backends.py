@@ -101,6 +101,15 @@ class UsageMeter:
         finally:
             self._local.key = prev
 
+    def current_key(self) -> Optional[tuple]:
+        """The ambient logical key installed by :meth:`keyed` on this
+        thread (None outside a keyed block). Fault-injection harnesses
+        (``testing.FlakyBackend``) key their deterministic fault plans
+        off it: the logical call identity is driver- and shard-invariant,
+        so a seeded plan injects the same faults into the same logical
+        calls no matter how execution is scheduled."""
+        return getattr(self._local, "key", None)
+
     def record(self, tier_name: str, usage: Usage,
                per_call_latency_s: Optional[Sequence[float]] = None,
                key: Optional[tuple] = None,

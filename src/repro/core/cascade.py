@@ -261,7 +261,14 @@ class CascadeRouter:
                   key: Optional[tuple] = None) -> CascadePartition:
         """Score one morsel's rows (one ``tier0-embed`` call through the
         dispatcher: billed on the morsel's shard, placed on the event
-        timeline) and band-route them. Deterministic given (op, values)."""
+        timeline) and band-route them. Deterministic given (op, values).
+
+        Failure contract: exceptions propagate to the caller — the
+        executor's ``cascade_partition`` catches them and *degrades*
+        (escalates the whole morsel to the LLM tier, byte-identical to a
+        no-cascade run) instead of failing the query; an active
+        ``CallPolicy`` additionally retries the embed call below the
+        dispatcher before the failure ever surfaces here."""
         bands = self.bands_for(op)
         values = list(values)
         # the device pass rides the dispatcher like any backend call —

@@ -467,7 +467,17 @@ class CostModel:
         call key (``UsageMeter.merge`` semantics) before folding, so the
         EWMA/q-error state is independent of thread arrival order, the
         driver, and the shard count. Idempotent per meter: a second
-        observe of the same meter ingests only entries recorded since."""
+        observe of the same meter ingests only entries recorded since.
+
+        Fault-tolerance contract: only calls that *produced an answer*
+        calibrate. A retried call's successful attempt carries its op
+        kind and folds normally under the tier that served it — including
+        a breaker/fallback substitution, which bills (and therefore
+        calibrates) under the fallback tier's own name, keeping q-error
+        state truthful about who actually answered. Failed attempts are
+        billed untyped (``op_kind=None`` — e.g. ``testing.FlakyBackend``
+        fault entries), so the ``info is None`` skip below excludes them:
+        a storm of injected faults never corrupts the latency EWMAs."""
         with meter._lock:
             log = list(meter.call_log)
             keys = list(meter.call_keys)

@@ -196,6 +196,7 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
             shards: Optional[int] = None,
             shard_cache: Optional[str] = None,
             cascade=None,
+            call_policy: Optional[rt.CallPolicy] = None,
             scheduler: Optional[rt.EventScheduler] = None,
             dispatcher: Optional[rt.Dispatcher] = None,
             query_key=None
@@ -239,7 +240,8 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
                               ("linger_s", linger_s),
                               ("shards", shards),
                               ("shard_cache", shard_cache),
-                              ("cascade", cascade))
+                              ("cascade", cascade),
+                              ("call_policy", call_policy))
             if v is not None}
     ctx = rt.as_context(backends, **over)
 
@@ -279,7 +281,8 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                                  cache=ctx.cache, linger_s=ctx.linger_s)
     casc = ctx.cascade
     casc_stats = {"embed_calls": 0, "passed": 0, "dropped": 0,
-                  "escalated": 0} if casc is not None else None
+                  "escalated": 0, "embed_failures": 0} \
+        if casc is not None else None
 
     def cascade_partition(op, oi, idx, values, ready):
         """Run the tier-0 embedding pass over one morsel's values (one
@@ -287,10 +290,22 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
         in the logical key sorts the device pass ahead of the operator's
         LLM chunks) and band-route every row. The partition is a pure
         function of (op, values), so routing — and therefore which rows
-        the LLM tiers see — is driver-, shard-, and order-invariant."""
-        part = casc.partition(op, values, disp, meter, ready=ready,
-                              shard=disp.shard_of(idx, query_key),
-                              key=kp + (oi, idx, -1))
+        the LLM tiers see — is driver-, shard-, and order-invariant.
+
+        Returns None when the embed pass *fails*: graceful degradation —
+        the caller escalates the whole morsel to the LLM tier, so a
+        tier-0 outage costs the cascade's savings, not the query (results
+        are byte-identical to a no-cascade run, since escalate-everything
+        is exactly what no cascade does). The failure count is reported
+        in ``cascade_stats["embed_failures"]``."""
+        try:
+            part = casc.partition(op, values, disp, meter, ready=ready,
+                                  shard=disp.shard_of(idx, query_key),
+                                  key=kp + (oi, idx, -1))
+        except Exception:
+            with rows_lock:
+                casc_stats["embed_failures"] += 1
+            return None
         with rows_lock:
             casc_stats["embed_calls"] += 1
             casc_stats["passed"] += part.n_pass
@@ -333,15 +348,20 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                     # tier-0 cascade: resolve the confident bands on
                     # device, submit ONLY the uncertain band to the batch
                     # queue; the partition's merge folds the escalated
-                    # outputs back when the morsel is forced
+                    # outputs back when the morsel is forced. A failed
+                    # embed pass (part is None) degrades: fall through
+                    # and submit every row, exactly as if no cascade
+                    # were configured for this morsel.
                     part = cascade_partition(op, oi, idx, values, ready)
-                    with rows_lock:
-                        rows_processed[0] += len(part.escalate)
-                    fut = group.submit(idx,
-                                       [values[i] for i in part.escalate],
-                                       max(ready, part.finish))
-                    return (_PendingMorsel(op, tbl, fut, fold=part.merge),
-                            ready)
+                    if part is not None:
+                        with rows_lock:
+                            rows_processed[0] += len(part.escalate)
+                        fut = group.submit(
+                            idx, [values[i] for i in part.escalate],
+                            max(ready, part.finish))
+                        return (_PendingMorsel(op, tbl, fut,
+                                               fold=part.merge),
+                                ready)
                 with rows_lock:
                     rows_processed[0] += len(values)
                 return (_PendingMorsel(op, tbl,
@@ -363,14 +383,18 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                 return out_tbl, finish
             if casc is not None and casc.active_for(op):
                 part = cascade_partition(op, oi, idx, values, ready)
-                if part.escalate:
-                    esc, finish = llm_calls(
-                        op, oi, idx, [values[i] for i in part.escalate],
-                        max(ready, part.finish))
-                else:
-                    esc, finish = [], part.finish
-                out_tbl, _ = rt.apply_outputs(op, tbl, part.merge(esc))
-                return out_tbl, finish
+                if part is not None:
+                    if part.escalate:
+                        esc, finish = llm_calls(
+                            op, oi, idx,
+                            [values[i] for i in part.escalate],
+                            max(ready, part.finish))
+                    else:
+                        esc, finish = [], part.finish
+                    out_tbl, _ = rt.apply_outputs(op, tbl,
+                                                  part.merge(esc))
+                    return out_tbl, finish
+                # degraded: the LLM tier answers the whole morsel
             outs, finish = llm_calls(op, oi, idx, values, ready)
             out_tbl, _ = rt.apply_outputs(op, tbl, outs)
             return out_tbl, finish
@@ -395,22 +419,28 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                     (tbl, out), finish = disp.run_host(
                         lambda t=tbl, v=values: rt.run_udf_op(op, t, v),
                         tbl.n_rows, ready_s=ready)
-                elif (casc is not None and tbl.n_rows > 0
-                        and casc.active_for(op)):
-                    # cascaded RANK: the pass/drop tails keep their
-                    # embedding order; only the middle band is re-ranked
-                    # by the LLM tier
-                    part = cascade_partition(op, oi, 0, values, ready)
-                    if part.escalate:
-                        esc, finish = llm_calls(
-                            op, oi, 0, [values[i] for i in part.escalate],
-                            max(ready, part.finish))
-                    else:
-                        esc, finish = [], part.finish
-                    tbl, out = rt.apply_outputs(op, tbl, part.merge(esc))
                 else:
-                    outs, finish = llm_calls(op, oi, 0, values, ready)
-                    tbl, out = rt.apply_outputs(op, tbl, outs)
+                    part = None
+                    if (casc is not None and tbl.n_rows > 0
+                            and casc.active_for(op)):
+                        # cascaded RANK: the pass/drop tails keep their
+                        # embedding order; only the middle band is
+                        # re-ranked by the LLM tier. A failed embed pass
+                        # (part None) degrades to a full LLM re-rank.
+                        part = cascade_partition(op, oi, 0, values, ready)
+                    if part is not None:
+                        if part.escalate:
+                            esc, finish = llm_calls(
+                                op, oi, 0,
+                                [values[i] for i in part.escalate],
+                                max(ready, part.finish))
+                        else:
+                            esc, finish = [], part.finish
+                        tbl, out = rt.apply_outputs(op, tbl,
+                                                    part.merge(esc))
+                    else:
+                        outs, finish = llm_calls(op, oi, 0, values, ready)
+                        tbl, out = rt.apply_outputs(op, tbl, outs)
                 if op.kind == plan_ir.REDUCE:
                     scalar = out
                     is_reduce = True

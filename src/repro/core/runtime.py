@@ -99,6 +99,7 @@ side by side (``launch/serve.py --semantic`` does exactly that).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import heapq
 import threading
@@ -332,10 +333,270 @@ class OutputCache:
             event.set()
 
 
+# ---------------------------------------------------------------------------
+# Fault tolerance: call policy, retries, circuit breaker, tier fallback
+# ---------------------------------------------------------------------------
+
+class TransientCallError(RuntimeError):
+    """A backend call failed in a way a retry may fix (the kind of error
+    a real LLM endpoint returns for overload / 5xx / connection resets).
+    Chaos harnesses (``testing.FlakyBackend``) raise it; policies retry
+    any ``Exception``, but this type names the contract."""
+
+
+class CallTimeoutError(TransientCallError):
+    """A backend call exceeded the policy's per-call deadline."""
+
+
+class ShardDeadError(RuntimeError):
+    """Raised when work is routed to a shard marked dead and no live
+    shard remains to absorb it."""
+
+
+# negative-int markers appended to logical meter keys so retried / fallback
+# attempts sort deterministically next to their primary attempt in a merged
+# log without ever colliding with real chunk ordinals (>= 0). The cascade
+# already reserves -1 for its embed pass.
+RETRY_KEY_MARK = -2
+FALLBACK_KEY_MARK = -3
+
+_CALL_LOCAL = threading.local()
+
+
+def current_call_timeout() -> Optional[float]:
+    """The per-call deadline (seconds) installed by the active
+    :class:`CallPolicy` for the backend call running on this thread, or
+    None when no policy is enforcing one. Backends that can bound their
+    own work (and fault harnesses deciding whether a call "times out")
+    read it here — the policy layer cannot preempt a running call, so the
+    deadline is cooperative."""
+    return getattr(_CALL_LOCAL, "timeout_s", None)
+
+
+@contextlib.contextmanager
+def _call_deadline(timeout_s: Optional[float]):
+    prev = getattr(_CALL_LOCAL, "timeout_s", None)
+    _CALL_LOCAL.timeout_s = timeout_s
+    try:
+        yield
+    finally:
+        _CALL_LOCAL.timeout_s = prev
+
+
+@dataclasses.dataclass(frozen=True)
+class CallPolicy:
+    """Per-call fault-tolerance policy (all defaults = fail-fast, i.e.
+    today's behaviour; an all-default policy is *inactive* and the
+    runtime takes the exact pre-policy code paths, byte for byte).
+
+    ``retries``             extra attempts per backend call after the
+                            first failure.
+    ``call_timeout_s``      cooperative per-call deadline, surfaced to
+                            backends via :func:`current_call_timeout`.
+    ``backoff_s``           base backoff between attempts. Sleeps only
+                            happen under the threads driver; the delay is
+                            deterministic — ``backoff_s * attempt *
+                            unit_hash(seed, key, attempt)`` — so a fixed
+                            fault plan reproduces the same schedule.
+    ``retry_budget``        global cap on retry attempts across the whole
+                            dispatcher (None = unlimited). Exhausted
+                            budget = no more retries, straight to
+                            fallback/raise.
+    ``breaker_threshold``   consecutive *exhausted* calls on one
+                            (tier, shard) before its circuit opens and
+                            calls skip straight to the fallback
+                            (0 = breaker disabled). A tripped breaker
+                            stays open for the dispatcher's lifetime.
+    ``fallback_tier``       sibling tier that serves a call once its
+                            primary exhausts retries or its breaker is
+                            open (None = re-raise). Fallback calls bill
+                            under the fallback tier's own name with a
+                            ``FALLBACK_KEY_MARK`` key suffix, so the
+                            substitution is visible in the log and the
+                            CostModel calibrates the tier that actually
+                            served.
+    ``shard_failure_threshold``  consecutive failed calls on one shard
+                            before ``ShardedDispatcher`` declares the
+                            shard dead and requeues its pending work
+                            (None = detection off; ``kill_shard`` only).
+    ``seed``                seed for the deterministic backoff jitter.
+    """
+
+    retries: int = 0
+    call_timeout_s: Optional[float] = None
+    backoff_s: float = 0.0
+    retry_budget: Optional[int] = None
+    breaker_threshold: int = 0
+    fallback_tier: Optional[str] = None
+    shard_failure_threshold: Optional[int] = None
+    seed: int = 0
+
+    @property
+    def active(self) -> bool:
+        """Whether the per-call layer must engage. All-default policies
+        (and ones that only set ``shard_failure_threshold``) keep the
+        pre-policy call path."""
+        return (self.retries > 0 or self.call_timeout_s is not None
+                or self.breaker_threshold > 0
+                or self.fallback_tier is not None
+                or self.retry_budget is not None)
+
+
+class FaultPolicyRuntime:
+    """Shared mutable state enforcing one :class:`CallPolicy` across a
+    dispatcher: retry-budget counter, per-(tier, shard) breaker state,
+    and fault statistics. One instance is shared by every inner shard
+    dispatcher so the budget and breakers are global to the execution.
+
+    ``invoke`` wraps exactly one logical backend call (one chunk). It
+    sits *below* the :class:`OutputCache` — retries re-run only the
+    failed chunk, and a call ultimately served by the fallback tier still
+    publishes under the primary tier's cache key (the cache stores the
+    logical call's answer, whatever tier produced it)."""
+
+    def __init__(self, policy: CallPolicy,
+                 backends: Optional[Dict[str, Any]] = None,
+                 real_time: bool = False):
+        self.policy = policy
+        self.backends = dict(backends or {})
+        self.real_time = bool(real_time)
+        self._lock = threading.Lock()
+        self._consec: Dict[Tuple[str, int], int] = {}
+        self._open: set = set()
+        self._retries_spent = 0
+        self.stats = {"attempts": 0, "retries": 0, "failures": 0,
+                      "exhausted": 0, "breaker_trips": 0,
+                      "fallback_calls": 0, "budget_denied": 0}
+
+    # -- breaker ---------------------------------------------------------
+    def breaker_open(self, tier_name: str, shard: int) -> bool:
+        if self.policy.breaker_threshold <= 0:
+            return False
+        with self._lock:
+            return (tier_name, shard) in self._open
+
+    def _note_result(self, tier_name: str, shard: int, ok: bool) -> None:
+        th = self.policy.breaker_threshold
+        if th <= 0:
+            return
+        k = (tier_name, shard)
+        with self._lock:
+            if ok:
+                self._consec[k] = 0
+                return
+            n = self._consec.get(k, 0) + 1
+            self._consec[k] = n
+            if n >= th and k not in self._open:
+                self._open.add(k)
+                self.stats["breaker_trips"] += 1
+
+    def reset_breakers(self) -> None:
+        """Close every open breaker (operator intervention; nothing in
+        the hot path re-closes one)."""
+        with self._lock:
+            self._open.clear()
+            self._consec.clear()
+
+    # -- retry budget / backoff -----------------------------------------
+    def _take_retry_token(self) -> bool:
+        budget = self.policy.retry_budget
+        with self._lock:
+            if budget is not None and self._retries_spent >= budget:
+                self.stats["budget_denied"] += 1
+                return False
+            self._retries_spent += 1
+            return True
+
+    def _backoff(self, key: Optional[tuple], attempt: int) -> None:
+        base = self.policy.backoff_s
+        if base <= 0.0 or not self.real_time:
+            return   # simulated driver: backoff is modeled as zero-cost
+        jitter = bk._unit_hash("backoff", self.policy.seed,
+                               repr(key), attempt)
+        time.sleep(base * attempt * (0.5 + 0.5 * jitter))
+
+    # -- fallback --------------------------------------------------------
+    def fallback_backend(self, tier_name: str):
+        fb = self.policy.fallback_tier
+        if fb is None or fb == tier_name:
+            return None, None
+        backend = self.backends.get(fb)
+        if backend is None:
+            return None, None
+        return fb, backend
+
+    def _run_fallback(self, fb_backend, op, values, meter, batch_size,
+                      key: Optional[tuple]):
+        with self._lock:
+            self.stats["fallback_calls"] += 1
+        fkey = None if key is None else tuple(key) + (FALLBACK_KEY_MARK,)
+        with _call_deadline(self.policy.call_timeout_s):
+            if fkey is None:
+                return fb_backend.run_values(op, values, meter=meter,
+                                             batch_size=batch_size)
+            with meter.keyed(fkey):
+                return fb_backend.run_values(op, values, meter=meter,
+                                             batch_size=batch_size)
+
+    # -- the call wrapper ------------------------------------------------
+    def invoke(self, backend, tier_name: str, op, values, meter,
+               batch_size: int, key: Optional[tuple],
+               shard: int = 0) -> List[Any]:
+        pol = self.policy
+        fb_name, fb_backend = self.fallback_backend(tier_name)
+        if fb_backend is not None and self.breaker_open(tier_name, shard):
+            return self._run_fallback(fb_backend, op, values, meter,
+                                      batch_size, key)
+        last: Optional[BaseException] = None
+        for attempt in range(max(0, pol.retries) + 1):
+            if attempt > 0 and not self._take_retry_token():
+                break
+            self._backoff(key, attempt)
+            akey = key if (attempt == 0 or key is None) \
+                else tuple(key) + (RETRY_KEY_MARK, attempt)
+            with self._lock:
+                self.stats["attempts"] += 1
+                if attempt > 0:
+                    self.stats["retries"] += 1
+            try:
+                with _call_deadline(pol.call_timeout_s):
+                    if akey is None:
+                        outs = backend.run_values(op, values, meter=meter,
+                                                  batch_size=batch_size)
+                    else:
+                        with meter.keyed(akey):
+                            outs = backend.run_values(
+                                op, values, meter=meter,
+                                batch_size=batch_size)
+                self._note_result(tier_name, shard, ok=True)
+                return outs
+            except Exception as e:
+                last = e
+                with self._lock:
+                    self.stats["failures"] += 1
+        with self._lock:
+            self.stats["exhausted"] += 1
+        self._note_result(tier_name, shard, ok=False)
+        if fb_backend is not None:
+            return self._run_fallback(fb_backend, op, values, meter,
+                                      batch_size, key)
+        assert last is not None
+        raise last
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            out = dict(self.stats)
+            out["open_breakers"] = sorted(self._open)
+            out["retry_budget_spent"] = self._retries_spent
+        return out
+
+
 def run_backend_calls(op: plan_ir.Operator, values: Sequence[Any], backend,
                       meter: bk.UsageMeter, batch_size: int = 1,
                       fanout: Optional[Callable] = None,
-                      key: Optional[tuple] = None) -> List[Any]:
+                      key: Optional[tuple] = None,
+                      policy: Optional[FaultPolicyRuntime] = None,
+                      tier_name: str = "", shard: int = 0) -> List[Any]:
     """Invoke the backend over ``values``. Without a ``fanout`` the whole
     request is one inline ``run_values`` (the backend batches internally).
     With a ``fanout`` — a callable mapping a list of thunks to their results,
@@ -349,9 +610,18 @@ def run_backend_calls(op: plan_ir.Operator, values: Sequence[Any], backend,
     it is re-entered as the meter's ambient key *inside* each thunk so the
     billed entries carry it even when they run on a tier-pool thread —
     ``UsageMeter.merge`` sorts by these keys for deterministic shard-merge
-    logs."""
+    logs.
+
+    ``policy`` (an *active* :class:`FaultPolicyRuntime`) wraps every chunk
+    call in retry/deadline/breaker/fallback enforcement. With a policy the
+    inline (no-fanout) path chunks exactly like the fanout path and bills
+    each chunk under ``key + (j,)`` — normalizing the per-attempt key shape
+    across drivers so a seeded fault plan draws identically under both
+    (without a policy the inline path is byte-identical to the pre-policy
+    runtime, including key shapes)."""
     values = list(values)
-    if fanout is None:
+    policed = policy is not None and policy.policy.active
+    if fanout is None and not policed:
         if key is None:
             return backend.run_values(op, values, meter=meter,
                                       batch_size=batch_size)
@@ -365,13 +635,19 @@ def run_backend_calls(op: plan_ir.Operator, values: Sequence[Any], backend,
         chunks = [values[i:i + step] for i in range(0, len(values), step)]
 
     def call(c, j):
-        if key is None:
+        ck = None if key is None else tuple(key) + (j,)
+        if policed:
+            return policy.invoke(backend, tier_name, op, c, meter,
+                                 batch_size, ck, shard=shard)
+        if ck is None:
             return backend.run_values(op, c, meter=meter,
                                       batch_size=batch_size)
-        with meter.keyed(tuple(key) + (j,)):
+        with meter.keyed(ck):
             return backend.run_values(op, c, meter=meter,
                                       batch_size=batch_size)
 
+    if fanout is None:
+        return [o for j, c in enumerate(chunks) for o in call(c, j)]
     thunks = [(lambda c=c, j=j: call(c, j)) for j, c in enumerate(chunks)]
     return [o for part in fanout(thunks) for o in part]
 
@@ -380,14 +656,21 @@ def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
                meter: bk.UsageMeter, *, batch_size: int = 1,
                cache: Optional[OutputCache] = None,
                fanout: Optional[Callable] = None,
-               key: Optional[tuple] = None):
+               key: Optional[tuple] = None,
+               policy: Optional[FaultPolicyRuntime] = None,
+               shard: int = 0):
     """Execute one LLM operator, via the cache when provided. Returns
     (outputs, n_calls_made, latency_of_calls_made).
 
     ``fanout`` (see :func:`run_backend_calls`) runs the backend calls on a
     tier worker pool; the returned call/latency deltas are then approximate
     (other threads may bill the same tier concurrently) — callers on the
-    threaded path ignore them and read the meter instead."""
+    threaded path ignore them and read the meter instead.
+
+    ``policy``/``shard`` thread fault-tolerance enforcement down to every
+    chunk call (see :class:`FaultPolicyRuntime`). Retries happen *below*
+    the cache layer: a call that ultimately succeeds (retried or served by
+    the fallback tier) publishes under its primary-tier cache key."""
     values = list(values)
     before_calls = meter.calls(tier_name)
     before_lat = meter.latency(tier_name)
@@ -402,7 +685,8 @@ def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
 
     if cache is None:
         outs = run_backend_calls(op, values, backend, meter, batch_size,
-                                 fanout, key=key)
+                                 fanout, key=key, policy=policy,
+                                 tier_name=tier_name, shard=shard)
         n, lat = deltas(True)
         return outs, n, lat
 
@@ -422,7 +706,8 @@ def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
                 return [got], 0, 0.0
         try:
             outs = run_backend_calls(op, values, backend, meter, batch_size,
-                                     fanout, key=key)
+                                     fanout, key=key, policy=policy,
+                                     tier_name=tier_name, shard=shard)
         except BaseException:
             cache.release([rkey], token)
             raise
@@ -437,7 +722,9 @@ def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
     try:
         if own:
             got = run_backend_calls(op, [values[i] for i in own], backend,
-                                    meter, batch_size, fanout, key=key)
+                                    meter, batch_size, fanout, key=key,
+                                    policy=policy, tier_name=tier_name,
+                                    shard=shard)
             for i, o in zip(own, got):
                 outs[i] = o
                 cache.publish(keys[i], o)
@@ -451,7 +738,9 @@ def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
             ok, val = cache.wait_value(keys[i], v)
             if not ok:   # the owning caller failed: compute solo
                 val = run_backend_calls(op, [values[i]], backend, meter,
-                                        batch_size, fanout, key=key)[0]
+                                        batch_size, fanout, key=key,
+                                        policy=policy, tier_name=tier_name,
+                                        shard=shard)[0]
                 cache.publish(keys[i], val)
             outs[i] = val
     n, lat = deltas(bool(own))
@@ -588,6 +877,17 @@ class Dispatcher:
 
     kind = "abstract"
     n_shards = 1
+    # the dispatcher-wide FaultPolicyRuntime (None = fail-fast); set by
+    # the concrete drivers' constructors when an active CallPolicy is
+    # configured on the ExecutionContext
+    policy: Optional[FaultPolicyRuntime] = None
+
+    def fault_stats(self) -> Optional[Dict[str, Any]]:
+        """Snapshot of the fault-policy counters (attempts, retries,
+        breaker trips, fallback calls, open breakers); None when no
+        policy is active."""
+        pol = self.policy
+        return None if pol is None else pol.snapshot()
 
     def shard_of(self, morsel_idx: int, query=None) -> int:
         """Which shard owns morsel ``morsel_idx`` (round-robin when
@@ -642,8 +942,10 @@ class SimulatedDispatcher(Dispatcher):
 
     kind = "simulated"
 
-    def __init__(self, scheduler: EventScheduler):
+    def __init__(self, scheduler: EventScheduler,
+                 policy: Optional[FaultPolicyRuntime] = None):
         self.sched = scheduler
+        self.policy = policy
 
     def defer(self, task, fn, shard: int = 0):
         value, ready = task.result()
@@ -655,7 +957,8 @@ class SimulatedDispatcher(Dispatcher):
                 key: Optional[tuple] = None):
         cursor = len(meter.call_log)
         outs, _, _ = run_llm_op(op, values, backend, tier_name, meter,
-                                batch_size=batch_size, cache=cache, key=key)
+                                batch_size=batch_size, cache=cache, key=key,
+                                policy=self.policy, shard=shard)
         _, finish = self.sched.drain(meter, cursor, ready_s=ready_s)
         return outs, finish
 
@@ -706,10 +1009,12 @@ class ThreadPoolDispatcher(Dispatcher):
     def __init__(self, concurrency: int = 16,
                  per_tier: Optional[Dict[str, int]] = None,
                  mode: str = "async", chain_workers: int = 32,
-                 host_lock: Optional[threading.Lock] = None):
+                 host_lock: Optional[threading.Lock] = None,
+                 policy: Optional[FaultPolicyRuntime] = None):
         if mode not in ("sync", "async"):
             raise ValueError(f"unknown dispatcher mode {mode!r}")
         self.mode = mode
+        self.policy = policy
         self.concurrency = max(1, int(concurrency))
         self.per_tier = dict(per_tier or {})
         self._pools: Dict[str, ThreadPoolExecutor] = {}
@@ -779,7 +1084,8 @@ class ThreadPoolDispatcher(Dispatcher):
                 key: Optional[tuple] = None):
         outs, _, _ = run_llm_op(op, values, backend, tier_name, meter,
                                 batch_size=batch_size, cache=cache,
-                                fanout=self.fanout(tier_name), key=key)
+                                fanout=self.fanout(tier_name), key=key,
+                                policy=self.policy, shard=shard)
         return outs, 0.0
 
     def run_host(self, fn, n_rows: int, ready_s: float = 0.0,
@@ -798,6 +1104,19 @@ class ThreadPoolDispatcher(Dispatcher):
     def wall_s(self) -> float:
         with self._lock:
             return max(0.0, self._last - self._t0)
+
+    def abandon(self) -> None:
+        """Non-blocking teardown for a killed shard worker: already
+        *running* calls complete (and bill exactly once into their
+        staging meter); *queued* tasks are cancelled so the owning
+        ``ShardedDispatcher`` can requeue them onto surviving shards.
+        Idempotent; a later ``close()`` is a no-op on the same pools."""
+        self._chain.shutdown(wait=False, cancel_futures=True)
+        with self._lock:
+            pools = list(self._pools.values())
+            self._pools.clear()
+        for p in pools:
+            p.shutdown(wait=False, cancel_futures=True)
 
     def close(self) -> None:
         self._chain.shutdown(wait=True)
@@ -818,16 +1137,36 @@ DRIVERS = ("simulated", "threads")
 class _MorselState:
     """Per-(operator, morsel) resolution buffer: row outputs fill in as the
     batches containing them flush; ``fut`` completes with
-    ``(outs, finish_s)`` once every row is resolved."""
+    ``(outs, finish_s)`` once every row is resolved.
 
-    __slots__ = ("outs", "remaining", "finish", "fut", "_lock")
+    A failed batch poisons its rows via :meth:`poison_row` — the morsel's
+    future then completes *exceptionally*, but only once every one of its
+    rows has settled (resolved by a sibling batch or poisoned too). Failing
+    the future the moment any batch died would let the poisoned morsel's
+    chain unwind — and the whole execution settle — while sibling batches
+    holding this morsel's other rows are still billing calls, making the
+    final meter racy; waiting for all rows keeps teardown deterministic."""
+
+    __slots__ = ("outs", "remaining", "finish", "fut", "exc", "_lock")
 
     def __init__(self, n: int, ready: float):
         self.outs: List[Any] = [None] * n
         self.remaining = n
         self.finish = ready
         self.fut: Future = Future()
+        self.exc: Optional[BaseException] = None
         self._lock = threading.Lock()
+
+    def _settle(self) -> None:
+        if self.fut.done():
+            return
+        try:
+            if self.exc is not None:
+                self.fut.set_exception(self.exc)
+            else:
+                self.fut.set_result((self.outs, self.finish))
+        except Exception:
+            pass                          # lost a race with fail()
 
     def resolve(self, pos: int, out, finish: float) -> None:
         with self._lock:
@@ -836,10 +1175,21 @@ class _MorselState:
                 self.finish = finish
             self.remaining -= 1
             done = self.remaining == 0
-        if done and not self.fut.done():
-            self.fut.set_result((self.outs, self.finish))
+        if done:
+            self._settle()
+
+    def poison_row(self, pos: int, exc: BaseException) -> None:
+        with self._lock:
+            if self.exc is None:
+                self.exc = exc            # first failure wins
+            self.remaining -= 1
+            done = self.remaining == 0
+        if done:
+            self._settle()
 
     def fail(self, exc: BaseException) -> None:
+        """Terminal close path (coalescer shutdown): complete the future
+        exceptionally NOW, regardless of unsettled rows."""
         if not self.fut.done():
             try:
                 self.fut.set_exception(exc)
@@ -1023,8 +1373,13 @@ class _OpGroup:
                 self.tier, self.coal.meter, batch_size=self.coal.batch,
                 cache=self.coal.cache, ready_s=b.ready, shard=b.shard,
                 key=key)
-        except BaseException as e:        # backend failure: fail the rows,
+        except BaseException as e:        # backend failure: poison the rows,
             self._fail_batch(b, e)        # don't hang downstream morsels
+            return
+        if len(outs) != len(b.slots):
+            self._fail_batch(b, RuntimeError(
+                f"backend returned {len(outs)} outputs for "
+                f"{len(b.slots)} batched rows"))
             return
         with self.lock:
             for s in b.slots:
@@ -1036,13 +1391,18 @@ class _OpGroup:
                 state.resolve(pos, out, finish)
 
     def _fail_batch(self, b: _Batch, exc: BaseException) -> None:
+        """Poison every row this batch held. Row-level (not morsel-level):
+        a morsel whose rows straddle several batches keeps its in-flight
+        sibling batches running to completion — their calls bill
+        deterministically — and its future completes exceptionally only
+        once all its rows have settled."""
         with self.lock:
             for s in b.slots:
                 if s.key is not None:
                     self.inflight.pop(s.key, None)
             targets = [t for s in b.slots for t in s.targets]
-        for state, _ in targets:
-            state.fail(exc)
+        for state, pos in targets:
+            state.poison_row(pos, exc)
 
     def cut_expired(self, now: float) -> List[_Batch]:
         """Cut (but do not execute) a partial batch whose oldest row has
@@ -1287,6 +1647,13 @@ class ExecutionContext:
     # Typed Any only to keep dataclass field ordering simple; forks share
     # the instance, so a judge's sample runs calibrate the same model.
     cost_model: Optional[Any] = None
+    # fault-tolerance policy (CallPolicy) enforced by this context's
+    # dispatchers: per-call deadline, bounded retries, retry budget,
+    # per-(tier, shard) circuit breaker with sibling-tier fallback, and
+    # the sharded dispatcher's consecutive-failure shard liveness
+    # threshold. None (or an all-default CallPolicy) = fail-fast, with
+    # call paths byte-identical to the pre-policy runtime.
+    call_policy: Optional[CallPolicy] = None
     meter: bk.UsageMeter = dataclasses.field(default_factory=bk.UsageMeter)
     # long-lived dispatcher owned by this context (see dispatcher()/close();
     # init=False fields are NOT carried across fork(), so every fork starts
@@ -1311,6 +1678,11 @@ class ExecutionContext:
         if self.driver not in DRIVERS:
             raise ValueError(f"unknown driver {self.driver!r} "
                              f"(expected one of {DRIVERS})")
+        policy_rt = None
+        if self.call_policy is not None and self.call_policy.active:
+            policy_rt = FaultPolicyRuntime(
+                self.call_policy, backends=self.backends,
+                real_time=(self.driver == "threads"))
         if self.shards > 1:
             # local import: morsel_shards builds on this module
             from repro.distributed.morsel_shards import ShardedDispatcher
@@ -1318,12 +1690,15 @@ class ExecutionContext:
                 shards=self.shards, driver=self.driver,
                 concurrency=self.concurrency,
                 per_tier=self.per_tier_concurrency, mode=self.mode,
-                shared_cache=self.shard_cache != "local")
+                shared_cache=self.shard_cache != "local",
+                policy=policy_rt,
+                failure_threshold=(self.call_policy.shard_failure_threshold
+                                   if self.call_policy else None))
         if self.driver == "threads":
             return ThreadPoolDispatcher(self.concurrency,
                                         per_tier=self.per_tier_concurrency,
-                                        mode=self.mode)
-        return SimulatedDispatcher(self.make_scheduler())
+                                        mode=self.mode, policy=policy_rt)
+        return SimulatedDispatcher(self.make_scheduler(), policy=policy_rt)
 
     def dispatcher(self) -> Dispatcher:
         """The context's **long-lived** dispatcher: created on first use,

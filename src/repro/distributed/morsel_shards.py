@@ -62,6 +62,7 @@ combined logs regardless of thread arrival order.
 from __future__ import annotations
 
 import threading
+from concurrent.futures import CancelledError
 from typing import Dict, List, Optional, Tuple
 
 from repro.core import backends as bk
@@ -153,6 +154,44 @@ class _ShardSchedulerView:
         return self._sched.makespan
 
 
+class _ResilientTask:
+    """A chain task that survives its shard dying while still queued.
+
+    ``ThreadPoolDispatcher.abandon`` cancels queued (never-started) chain
+    tasks; their futures raise ``CancelledError``. Since a cancelled task
+    has no side effects, re-running its ``fn`` inline is exactly-once —
+    and any backend calls the re-run makes route through the owning
+    :class:`ShardedDispatcher`, which now sends them to surviving shards.
+    Already-*running* tasks are untouched by ``abandon`` and complete
+    normally (their calls bill exactly once into the dead shard's staging
+    meter, which ``finalize`` still merges)."""
+
+    __slots__ = ("_disp", "_up", "_fn", "_task")
+
+    def __init__(self, disp: "ShardedDispatcher", task, fn, shard: int):
+        self._disp = disp
+        self._up = task
+        self._fn = fn
+        while True:
+            s = disp._route(shard)
+            try:
+                self._task = disp._inner[s].defer(task, fn)
+                return
+            except RuntimeError:
+                # raced a kill at submit time ("cannot schedule new
+                # futures after shutdown"): re-route and try again
+                if not disp.is_dead(s):
+                    raise
+                shard = s
+
+    def result(self):
+        try:
+            return self._task.result()
+        except CancelledError:
+            value, ready = self._up.result()
+            return self._fn(value, ready)
+
+
 class ShardedDispatcher(rt.Dispatcher):
     """N shard workers behind the single ``Dispatcher`` interface.
 
@@ -168,12 +207,26 @@ class ShardedDispatcher(rt.Dispatcher):
     queue, and cross-shard waits (a coalesced batch needing another
     shard's submission, a cache follower awaiting another shard's
     publish) resolve on that *other* shard's pools, which progress
-    independently."""
+    independently.
+
+    Failed shards: :meth:`kill_shard` marks a shard dead (explicitly, or
+    automatically once ``failure_threshold`` consecutive backend-call
+    failures land on it). Every entry point re-routes dead-shard work to
+    the ring-next live shard; a threads shard's pools are ``abandon``\\ ed
+    (running calls finish and bill once, queued tasks cancel), cancelled
+    chains re-run via :class:`_ResilientTask`, and cancelled backend
+    calls retry on a survivor. With the default shared cache the retried
+    call's already-completed chunks resolve as cache hits, so call counts
+    and the merged logical-key log stay exactly what an undisturbed run
+    produces; the dead shard's staging meter still merges at
+    ``finalize``, so no billed call is ever lost or double-counted."""
 
     def __init__(self, shards: int, driver: str = "threads",
                  concurrency: int = 16,
                  per_tier: Optional[Dict[str, int]] = None,
-                 mode: str = "async", shared_cache: bool = True):
+                 mode: str = "async", shared_cache: bool = True,
+                 policy: Optional[rt.FaultPolicyRuntime] = None,
+                 failure_threshold: Optional[int] = None):
         if driver not in rt.DRIVERS:
             raise ValueError(f"unknown driver {driver!r} "
                              f"(expected one of {rt.DRIVERS})")
@@ -182,6 +235,10 @@ class ShardedDispatcher(rt.Dispatcher):
         self.concurrency = max(1, int(concurrency))
         self.per_tier = dict(per_tier or {})
         self.shared_cache = bool(shared_cache)
+        self.policy = policy
+        self._failure_threshold = failure_threshold
+        self._dead: set = set()
+        self._consec_fail: Dict[int, int] = {}
         self._lock = threading.Lock()
         self._local_caches: Dict[int, rt.OutputCache] = {}
         # per-query round-robin cursor offsets: concurrently admitted
@@ -200,7 +257,8 @@ class ShardedDispatcher(rt.Dispatcher):
                                               per_tier=self.per_tier,
                                               mode=mode)
             self._inner: List[rt.Dispatcher] = [
-                rt.SimulatedDispatcher(_ShardSchedulerView(self._sched, s))
+                rt.SimulatedDispatcher(_ShardSchedulerView(self._sched, s),
+                                       policy=policy)
                 for s in range(self.n_shards)]
         else:
             host_lock = threading.Lock()
@@ -209,7 +267,7 @@ class ShardedDispatcher(rt.Dispatcher):
                     self.concurrency,
                     per_tier={t: split_quota(q, self.n_shards)[s]
                               for t, q in self.per_tier.items()},
-                    mode=mode, host_lock=host_lock)
+                    mode=mode, host_lock=host_lock, policy=policy)
                 for s in range(self.n_shards)]
 
     # -- shard routing ---------------------------------------------------
@@ -232,6 +290,83 @@ class ShardedDispatcher(rt.Dispatcher):
     def release_query(self, query) -> None:
         with self._lock:
             self._query_base.pop(query, None)
+
+    # -- shard liveness --------------------------------------------------
+    def _route(self, shard: int) -> int:
+        """The physical shard that serves logical shard ``shard``: itself
+        while alive, else the ring-next live shard (every caller of a
+        dead shard deterministically agrees on the replacement)."""
+        shard = shard % self.n_shards
+        with self._lock:
+            if shard not in self._dead:
+                return shard
+            for k in range(1, self.n_shards):
+                s = (shard + k) % self.n_shards
+                if s not in self._dead:
+                    return s
+        raise rt.ShardDeadError("no live shard available")
+
+    def is_dead(self, shard: int) -> bool:
+        with self._lock:
+            return shard in self._dead
+
+    def live_shards(self) -> List[int]:
+        with self._lock:
+            return [s for s in range(self.n_shards)
+                    if s not in self._dead]
+
+    def kill_shard(self, shard: int) -> None:
+        """Declare one shard worker dead: subsequent work re-routes to
+        survivors, queued chain tasks and backend calls on the dead
+        shard's pools are cancelled (and requeued by the entry points
+        that observe the cancellation), already-running calls complete
+        and bill exactly once. Idempotent; killing the last live shard
+        is refused — an execution with zero workers cannot finish."""
+        if not (0 <= shard < self.n_shards):
+            raise ValueError(f"shard {shard} out of range "
+                             f"[0, {self.n_shards})")
+        with self._lock:
+            if shard in self._dead:
+                return
+            if len(self._dead) + 1 >= self.n_shards:
+                raise ValueError("cannot kill the last live shard")
+            self._dead.add(shard)
+            self._consec_fail.pop(shard, None)
+        abandon = getattr(self._inner[shard], "abandon", None)
+        if abandon is not None:
+            abandon()
+
+    def _shard_died_under(self, shard: int, exc: BaseException) -> bool:
+        """Whether ``exc`` means "this shard's pools were torn down",
+        as opposed to a genuine backend failure."""
+        if not self.is_dead(shard):
+            return False
+        if isinstance(exc, (CancelledError, rt.ShardDeadError)):
+            return True
+        return (isinstance(exc, RuntimeError)
+                and "shutdown" in str(exc))
+
+    def _note_call_result(self, shard: int, ok: bool) -> None:
+        """Consecutive-failure shard liveness: ``failure_threshold``
+        straight backend-call failures on one shard mark it dead (its
+        pending work requeues onto survivors); any success resets the
+        count. The failing call itself still raises — the threshold is a
+        health signal for *future* routing, not a retry mechanism (the
+        CallPolicy layer owns retries)."""
+        th = self._failure_threshold
+        if th is None or th <= 0:
+            return
+        with self._lock:
+            if ok:
+                self._consec_fail[shard] = 0
+                return
+            n = self._consec_fail.get(shard, 0) + 1
+            self._consec_fail[shard] = n
+            live = self.n_shards - len(self._dead)
+            should_kill = (n >= th and shard not in self._dead
+                           and live > 1)
+        if should_kill:
+            self.kill_shard(shard)
 
     def shard_quota(self, tier: str, shard: int) -> int:
         """The (shard, tier) pool width actually in force."""
@@ -268,25 +403,47 @@ class ShardedDispatcher(rt.Dispatcher):
 
     # -- Dispatcher interface --------------------------------------------
     def defer(self, task, fn, shard: int = 0):
-        return self._inner[shard].defer(task, fn)
+        if self.kind == "simulated":
+            # simulated defers execute fn inline at defer time; there is
+            # no queue to cancel, so plain routing suffices
+            return self._inner[self._route(shard)].defer(task, fn)
+        return _ResilientTask(self, task, fn, shard)
 
     def fanout(self, tier_name: str):
         # non-sharded callers (optimizer sample flows) run on shard 0
-        return self._inner[0].fanout(tier_name)
+        return self._inner[self._route(0)].fanout(tier_name)
 
     def run_llm(self, op, values, backend, tier_name, meter, *,
                 batch_size: int = 1,
                 cache: Optional[rt.OutputCache] = None,
                 ready_s: float = 0.0, shard: int = 0,
                 key: Optional[tuple] = None):
-        return self._inner[shard].run_llm(
-            op, values, backend, tier_name, self.meter_for(meter, shard),
-            batch_size=batch_size, cache=self._cache_for(cache, shard),
-            ready_s=ready_s, key=key)
+        while True:
+            s = self._route(shard)
+            try:
+                outs = self._inner[s].run_llm(
+                    op, values, backend, tier_name,
+                    self.meter_for(meter, s),
+                    batch_size=batch_size,
+                    cache=self._cache_for(cache, s),
+                    ready_s=ready_s, shard=s, key=key)
+            except BaseException as e:
+                if self._shard_died_under(s, e):
+                    # the shard died with this call queued/cancelled:
+                    # retry on a survivor. Chunks that completed before
+                    # the kill already published to the (shared) cache,
+                    # so the retry re-bills nothing it shouldn't.
+                    shard = s
+                    continue
+                self._note_call_result(s, ok=False)
+                raise
+            self._note_call_result(s, ok=True)
+            return outs
 
     def run_host(self, fn, n_rows: int, ready_s: float = 0.0,
                  shard: int = 0):
-        return self._inner[shard].run_host(fn, n_rows, ready_s=ready_s)
+        return self._inner[self._route(shard)].run_host(
+            fn, n_rows, ready_s=ready_s)
 
     def checkpoint(self, meter: bk.UsageMeter, cursor: int) -> int:
         return self._inner[0].checkpoint(meter, cursor)

@@ -201,7 +201,12 @@ class QueryServer:
     # -- lifecycle -------------------------------------------------------
     def drain(self, timeout: Optional[float] = None) -> None:
         """Wait for every admitted query (including ones admitted while
-        draining) to finish. Failures do not raise here — read them
+        draining) to finish. ONE deadline is shared by the whole drain:
+        every per-handle wait gets the *remaining* budget
+        (``deadline - now``), and every loop iteration — including the
+        retirement-pending spin — re-checks it, so the drain returns or
+        raises within ``timeout`` of the call no matter how many handles
+        it waits through. Failures do not raise here — read them
         per-handle."""
         deadline = None if timeout is None \
             else time.perf_counter() + timeout
@@ -215,7 +220,10 @@ class QueryServer:
                 if not pending:
                     return
             left = None if deadline is None \
-                else max(0.0, deadline - time.perf_counter())
+                else deadline - time.perf_counter()
+            if left is not None and left <= 0.0:
+                raise TimeoutError(
+                    f"{len(pending)} queries still in flight")
             waitable = [h for h in pending if not h.done()]
             if not waitable:
                 time.sleep(0.001)   # resolved, retirement imminent
@@ -256,7 +264,7 @@ class QueryServer:
     def stats(self) -> dict:
         total: Any = self.ctx.meter.total
         with self._lock:
-            return {
+            out = {
                 "admitted": self._seq,
                 "completed": self._completed,
                 "failed": self._failed,
@@ -265,3 +273,10 @@ class QueryServer:
                 "usd": total.usd,
                 "wall_s": self.wall_s,
             }
+        # fault-policy counters (retries, breaker trips, fallback calls);
+        # absent when the server runs fail-fast so existing consumers of
+        # the stats shape see no new key by default
+        faults = self._disp.fault_stats()
+        if faults is not None:
+            out["faults"] = faults
+        return out

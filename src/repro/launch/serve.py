@@ -101,6 +101,16 @@ def _semantic_context(args):
     # sync points feed it measured per-call latencies, and --explain-cost
     # prints its q-error table after the run
     model = CostModel(latency_weight=args.latency_weight)
+    # fault-tolerance knobs: an all-default policy stays None so the
+    # dispatchers keep the byte-identical fail-fast call paths
+    policy = None
+    if (args.retries > 0 or args.call_timeout is not None
+            or args.breaker_threshold > 0 or args.fallback_tier):
+        policy = rt.CallPolicy(retries=args.retries,
+                               call_timeout_s=args.call_timeout,
+                               breaker_threshold=args.breaker_threshold,
+                               fallback_tier=args.fallback_tier or None,
+                               seed=args.seed)
     ctx = rt.ExecutionContext(backends=backends, default_tier="m1",
                               concurrency=args.slots,
                               morsel_size=args.slots * 4,
@@ -110,7 +120,8 @@ def _semantic_context(args):
                               linger_s=args.linger,
                               shards=args.shards,
                               cascade=router,
-                              cost_model=model)
+                              cost_model=model,
+                              call_policy=policy)
     return table, cfg, engine, ctx
 
 
@@ -299,6 +310,24 @@ def build_parser() -> argparse.ArgumentParser:
                          "model's per-(op, tier) q-error table "
                          "(predicted vs measured latency/tokens from "
                          "online calibration)")
+    ap.add_argument("--retries", type=int, default=0,
+                    help="--semantic: extra attempts per backend call "
+                         "after a transient failure (0 = fail fast, "
+                         "today's behaviour)")
+    ap.add_argument("--call-timeout", type=float, default=None,
+                    help="--semantic: cooperative per-call deadline in "
+                         "seconds, surfaced to backends via "
+                         "runtime.current_call_timeout()")
+    ap.add_argument("--breaker-threshold", type=int, default=0,
+                    help="--semantic: consecutive exhausted calls on one "
+                         "(tier, shard) before its circuit opens and "
+                         "calls skip straight to --fallback-tier "
+                         "(0 = breaker off)")
+    ap.add_argument("--fallback-tier", default=None,
+                    help="--semantic: sibling tier that serves a call "
+                         "once its primary exhausts retries or its "
+                         "breaker is open (billed under the fallback "
+                         "tier's own name; unset = re-raise)")
     return ap
 
 

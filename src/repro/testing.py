@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import backends as bk
 from repro.core import plan as plan_ir
+from repro.core import runtime as rt
 from repro.core.cost import TierSpec
 
 
@@ -203,3 +204,108 @@ class SleepBackend:
                          per_call_latency_s=[self.delay_s] * n_calls,
                          op_kind=op.kind)
         return outs
+
+
+class FlakyBackend:
+    """Deterministic chaos wrapper around any backend — the fault plan
+    is a pure function of ``(seed, logical call key)``.
+
+    Each ``run_values`` call draws ``u = _unit_hash("fault-plan", seed,
+    key)`` where the key is the ambient :meth:`UsageMeter.current_key`
+    the runtime installs around every backend call. Logical keys are
+    driver-, shard-count- and admission-order-invariant, and retry
+    attempts carry their own ``(RETRY_KEY_MARK, attempt)`` suffix — so a
+    fixed ``(seed, rates)`` plan injects the same faults into the same
+    logical calls under any scheduling, and a retried call draws fresh.
+    Bands (in order): ``u < error_rate`` raises
+    :class:`runtime.TransientCallError`; next ``timeout_rate`` raises
+    :class:`runtime.CallTimeoutError` (billing the call's deadline as
+    its latency); next ``slow_rate`` sleeps ``slow_s`` real seconds
+    (only when ``real_sleep``) then answers normally. ``poison_values``
+    fail *every* attempt — the permanent-failure band retries cannot
+    mask (used by the coalescer-poison regression tests).
+
+    Faulted attempts are billed as one call with ``op_kind=None``: they
+    land in the call log and the spend totals (retries are not free),
+    but :meth:`CostModel.observe` skips them, so fault noise never
+    corrupts the latency/q-error EWMAs."""
+
+    def __init__(self, inner, *, error_rate: float = 0.0,
+                 timeout_rate: float = 0.0, slow_rate: float = 0.0,
+                 slow_s: float = 0.0, seed: int = 0,
+                 fault_latency_s: float = 0.01,
+                 poison_values=(), real_sleep: bool = False):
+        self.inner = inner
+        self.tier = inner.tier
+        self.error_rate = error_rate
+        self.timeout_rate = timeout_rate
+        self.slow_rate = slow_rate
+        self.slow_s = slow_s
+        self.seed = seed
+        self.fault_latency_s = fault_latency_s
+        self.poison_values = frozenset(map(str, poison_values))
+        self.real_sleep = real_sleep
+        self.calls_seen = 0
+        self.faults_injected = 0
+        self._lock = threading.Lock()
+        self._anon_attempts: dict = {}
+
+    def __getattr__(self, name):
+        # delegate capability probes etc. (_capability, oracle, ...)
+        return getattr(self.inner, name)
+
+    def _ident(self, op, values, meter):
+        """Logical identity of this call for the fault draw."""
+        key = meter.current_key() if meter is not None else None
+        if key is not None:
+            return key
+        # no ambient key (bare run_values outside the runtime): fall
+        # back to content identity plus a per-identity attempt counter
+        # so repeated identical calls still draw independently
+        base = (op.kind, op.instruction, tuple(map(str, values)))
+        with self._lock:
+            n = self._anon_attempts.get(base, 0)
+            self._anon_attempts[base] = n + 1
+        return base + (n,)
+
+    def _bill_fault(self, op, values, meter, latency_s: float):
+        with self._lock:
+            self.faults_injected += 1
+        if meter is None:
+            return
+        tok_in = 8.0 * len(list(values))
+        meter.record(self.tier.name,
+                     bk.Usage(calls=1, tok_in=tok_in, tok_out=0.0,
+                              usd=self.tier.usd(tok_in, 0.0),
+                              latency_s=latency_s),
+                     per_call_latency_s=[latency_s],
+                     op_kind=None)
+
+    def run_values(self, op, values: Sequence, meter=None,
+                   batch_size: int = 1):
+        values = list(values)
+        with self._lock:
+            self.calls_seen += 1
+        if self.poison_values and any(str(v) in self.poison_values
+                                      for v in values):
+            self._bill_fault(op, values, meter, self.fault_latency_s)
+            raise rt.TransientCallError(
+                f"poisoned value in {op.kind}:{op.instruction}")
+        u = bk._unit_hash("fault-plan", self.seed,
+                          repr(self._ident(op, values, meter)))
+        if u < self.error_rate:
+            self._bill_fault(op, values, meter, self.fault_latency_s)
+            raise rt.TransientCallError(
+                f"injected transient error (u={u:.3f})")
+        if u < self.error_rate + self.timeout_rate:
+            budget = rt.current_call_timeout()
+            self._bill_fault(op, values, meter,
+                             budget if budget is not None
+                             else self.fault_latency_s)
+            raise rt.CallTimeoutError(
+                f"injected timeout (u={u:.3f})")
+        if u < self.error_rate + self.timeout_rate + self.slow_rate \
+                and self.real_sleep and self.slow_s:
+            time.sleep(self.slow_s)
+        return self.inner.run_values(op, values, meter=meter,
+                                     batch_size=batch_size)

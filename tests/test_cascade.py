@@ -248,7 +248,7 @@ def test_cascade_bands_validate():
 
 
 # ---------------------------------------------------------------------------
-# Failure isolation: a broken embedding pass poisons only its morsels
+# Failure isolation: a broken embedding pass degrades, never poisons
 # ---------------------------------------------------------------------------
 
 class _BoomEncoder(EmbeddingOracle):
@@ -258,11 +258,12 @@ class _BoomEncoder(EmbeddingOracle):
         return super().encode_values(op, values)
 
 
-def test_cascade_embed_failure_poisons_only_its_morsels():
-    """An embedding-pass failure must surface as the execution's error
-    without deadlocking the coalescer: the failed morsel's chain carries
-    poison (still advancing downstream watermarks) while every other
-    morsel completes."""
+def test_cascade_embed_failure_degrades_to_llm_escalation():
+    """The cascade is an *optimization*, so an embedding-pass failure
+    must never fail the query: the affected morsel degrades to the plain
+    all-escalate LLM path (same results as running without a cascade),
+    the failure is counted in ``cascade_stats["embed_failures"]``, and
+    every other morsel keeps cascading."""
     oracle = SelOracle()
     table = Table({"v": [f"x{i:02d}" if i < 24 else f"BOOM{i:02d}"
                          for i in range(32)]}, name="boom")
@@ -270,17 +271,23 @@ def test_cascade_embed_failure_poisons_only_its_morsels():
         P.Operator(P.FILTER, "boom keep", "v"),
         P.Operator(P.MAP, "boom annotate", "v", "a"),
     ))
-    backends = _backends(oracle)
+    base = {d: ex.execute(plan, table, _backends(oracle),
+                          default_tier="m*", batch_size=BATCH,
+                          morsel_size=8, driver=d)
+            for d in rt.DRIVERS}
     router = casc.CascadeRouter(
         casc.EmbeddingBackend(encoder=_BoomEncoder(oracle)),
         default_bands=casc.CascadeBands(lo=-2.0, hi=2.0))
     for driver in rt.DRIVERS:
         t0 = time.perf_counter()
-        with pytest.raises(RuntimeError, match="encoder down"):
-            ex.execute(plan, table, backends, default_tier="m*",
-                       batch_size=BATCH, morsel_size=8, driver=driver,
-                       cascade=router)
-        assert time.perf_counter() - t0 < 30.0       # raised, not hung
+        res = ex.execute(plan, table, _backends(oracle), default_tier="m*",
+                         batch_size=BATCH, morsel_size=8, driver=driver,
+                         cascade=router)
+        assert time.perf_counter() - t0 < 30.0       # degraded, not hung
+        assert result_fingerprint(res) == result_fingerprint(base[driver])
+        assert res.cascade_stats["embed_failures"] > 0
+        # the healthy morsels still ran their device passes
+        assert res.cascade_stats["embed_calls"] > 0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,615 @@
+"""Fault-tolerant serving suite (runtime.CallPolicy + chaos harness).
+
+Covers the robustness tentpole: deterministic retry/deadline/breaker
+enforcement inside both dispatch drivers, tier fallback on breaker trip,
+shard kill + morsel requeue on the sharded dispatcher, and the
+degradation contract for the tier-0 embedding cascade — all under the
+seeded :class:`testing.FlakyBackend` fault plans, which are pure
+functions of the logical call key and therefore driver-, shard-count-
+and admission-order-invariant. The acceptance bar: a fixed fault plan at
+10% transient failures leaves a 3-filter plan's results byte-identical
+to the fault-free run, retried attempts bill under distinct logical
+keys, and killing one shard of four mid-run requeues its morsels onto
+the survivors without corrupting results or double-billing."""
+import threading
+import time
+
+import pytest
+
+from repro.core import backends as bk
+from repro.core import cost as cost_mod
+from repro.core import cascade as casc
+from repro.core import executor as ex
+from repro.core import plan as P
+from repro.core import runtime as rt
+from repro.core.backends import SimulatedBackend
+from repro.core.cost import TierSpec
+from repro.core.cost_model import CostModel
+from repro.core.table import Table
+from repro.launch.query_server import QueryServer
+from repro.testing import (EmbeddingOracle, FlakyBackend, KindOracle,
+                           SleepBackend, result_fingerprint, tagged_plan,
+                           tagged_table)
+
+BATCH = 4
+MORSEL = 8
+
+
+def _spec(name="m*", usd_in=2.0, usd_out=8.0):
+    return TierSpec(name, 1.01, usd_in, usd_out, 0.01, 0.0)
+
+
+def _backend(name="m*", flaky=None):
+    b = SimulatedBackend(_spec(name), KindOracle(), violation_rate=0.0)
+    if flaky is not None:
+        b = FlakyBackend(b, **flaky)
+    return b
+
+
+def _filter3_plan(tag="fq3"):
+    return P.LogicalPlan(tuple(
+        P.Operator(P.FILTER, f"{tag} predicate {j}: keep", "v")
+        for j in range(3)))
+
+
+def _fingerprint_filter(res):
+    return tuple(res.table.columns[ex.ROWID])
+
+
+def _log_key(meter):
+    """Byte-comparable merged call log: (logical key, tier, latency)."""
+    return sorted(zip(meter.call_keys,
+                      [t for t, _ in meter.call_log],
+                      [round(l, 9) for _, l in meter.call_log]))
+
+
+def _totals_key(meter):
+    return {t: (u.calls, round(u.tok_in, 6), round(u.tok_out, 6),
+                round(u.usd, 9), round(u.latency_s, 6))
+            for t, u in sorted(meter.by_tier.items())}
+
+
+def _run(plan, table, backends, policy=None, driver="simulated",
+         shards=0, **kw):
+    meter = bk.UsageMeter()
+    res = ex.execute(plan, table, backends, default_tier="m*",
+                     batch_size=BATCH, morsel_size=MORSEL, meter=meter,
+                     call_policy=policy, driver=driver, shards=shards,
+                     **kw)
+    return res, meter
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast default: byte-identity with the pre-policy runtime
+# ---------------------------------------------------------------------------
+
+def test_fault_free_default_policy_is_byte_identical():
+    """An inactive CallPolicy() must leave the run byte-identical to no
+    policy at all — same results, same call log, same logical key
+    shapes (the fail-fast default costs nothing)."""
+    plan, table = _filter3_plan(), tagged_table("fq3", 32)
+    r0, m0 = _run(plan, table, {"m*": _backend()}, policy=None)
+    r1, m1 = _run(plan, table, {"m*": _backend()},
+                  policy=rt.CallPolicy())
+    assert not rt.CallPolicy().active
+    assert _fingerprint_filter(r1) == _fingerprint_filter(r0)
+    assert list(m1.call_keys) == list(m0.call_keys)
+    assert list(m1.call_log) == list(m0.call_log)
+    assert _totals_key(m1) == _totals_key(m0)
+
+
+# ---------------------------------------------------------------------------
+# Retries: the acceptance-bar plan
+# ---------------------------------------------------------------------------
+
+def test_retry_recovers_seeded_faults_results_identical():
+    """10% seeded transient failures + retries=2: the 3-filter plan's
+    results are byte-identical to the fault-free run and faults really
+    fired (the seed is chosen so the plan draws at least one)."""
+    plan, table = _filter3_plan(), tagged_table("fq3", 48)
+    r0, _ = _run(plan, table, {"m*": _backend()})
+    flaky = _backend(flaky=dict(error_rate=0.10, seed=11))
+    r1, m1 = _run(plan, table, {"m*": flaky},
+                  policy=rt.CallPolicy(retries=3))
+    assert flaky.faults_injected > 0
+    assert _fingerprint_filter(r1) == _fingerprint_filter(r0)
+    assert m1.total.calls > 0
+
+
+def test_retry_attempts_bill_under_distinct_keys():
+    """Every retried attempt lands in the call log under its own
+    logical key (base key + (RETRY_KEY_MARK, attempt)) — billing stays
+    per-attempt truthful and the merged log stays collision-free."""
+    plan, table = _filter3_plan(), tagged_table("fq3", 48)
+    flaky = _backend(flaky=dict(error_rate=0.25, seed=3))
+    _, m = _run(plan, table, {"m*": flaky},
+                policy=rt.CallPolicy(retries=4))
+    keys = list(m.call_keys)
+    assert all(k is not None for k in keys)
+    assert len(keys) == len(set(keys))
+    marked = [k for k in keys if rt.RETRY_KEY_MARK in k]
+    assert len(marked) == flaky.faults_injected > 0
+
+
+def test_same_fault_plan_same_policy_byte_identical_runs():
+    """Two runs under the same seeded fault plan and the same policy are
+    byte-identical: results, merged call log, spend totals."""
+    runs = []
+    plan, table = _filter3_plan(), tagged_table("fq3", 48)
+    for _ in range(2):
+        r, m = _run(plan, table,
+                    {"m*": _backend(flaky=dict(error_rate=0.25, seed=3))},
+                    policy=rt.CallPolicy(retries=4))
+        runs.append((_fingerprint_filter(r), _log_key(m),
+                     _totals_key(m)))
+    assert runs[0] == runs[1]
+
+
+def test_retry_driver_invariance():
+    """The same seeded fault plan injects the same faults — and bills
+    the same attempts — under both dispatch drivers: results, per-tier
+    totals and key-sorted call logs all agree."""
+    plan, table = _filter3_plan(), tagged_table("fq3", 48)
+    pol = rt.CallPolicy(retries=4)
+    ref = None
+    for driver in rt.DRIVERS:
+        flaky = _backend(flaky=dict(error_rate=0.25, seed=3))
+        r, m = _run(plan, table, {"m*": flaky}, policy=pol,
+                    driver=driver)
+        assert flaky.faults_injected > 0, driver
+        key = (_fingerprint_filter(r), _log_key(m), _totals_key(m))
+        if ref is None:
+            ref = key
+        assert key == ref, driver
+
+
+@pytest.mark.parametrize("driver", rt.DRIVERS)
+def test_retry_shard_count_invariance(driver):
+    """Sharding only moves calls between workers — a fixed fault plan
+    with retries produces byte-identical merged logs at 1, 2 and 4
+    shards."""
+    plan, table = _filter3_plan(), tagged_table("fq3", 48)
+    pol = rt.CallPolicy(retries=4)
+    ref = None
+    for shards in (1, 2, 4):
+        flaky = _backend(flaky=dict(error_rate=0.25, seed=3))
+        r, m = _run(plan, table, {"m*": flaky}, policy=pol,
+                    driver=driver, shards=shards)
+        key = (_fingerprint_filter(r), _log_key(m), _totals_key(m))
+        if ref is None:
+            ref = key
+        assert key == ref, (driver, shards)
+
+
+@pytest.mark.parametrize("driver", rt.DRIVERS)
+def test_retry_through_coalesced_batches(driver):
+    """Retries compose with the batch coalescer: coalesced cross-morsel
+    batches recover from injected faults and match the fault-free
+    coalesced run under both drivers."""
+    plan, table = tagged_plan("fqc"), tagged_table("fqc", 48)
+    r0, _ = _run(plan, table, {"m*": _backend()}, driver=driver,
+                 coalesce=True)
+    flaky = _backend(flaky=dict(error_rate=0.20, seed=5))
+    r1, m1 = _run(plan, table, {"m*": flaky}, driver=driver,
+                  coalesce=True, policy=rt.CallPolicy(retries=4))
+    assert flaky.faults_injected > 0
+    assert result_fingerprint(r1) == result_fingerprint(r0)
+
+
+# ---------------------------------------------------------------------------
+# Deadlines and retry budgets
+# ---------------------------------------------------------------------------
+
+def test_call_timeout_faults_retry_and_failfast_raises():
+    """Injected timeouts honor the per-call deadline: with retries they
+    recover (billing the deadline as the faulted attempt's latency);
+    fail-fast surfaces CallTimeoutError as the query failure."""
+    plan, table = _filter3_plan("fqt"), tagged_table("fqt", 32)
+    r0, _ = _run(plan, table, {"m*": _backend()})
+    flaky = _backend(flaky=dict(timeout_rate=0.25, seed=9))
+    r1, m1 = _run(plan, table, {"m*": flaky},
+                  policy=rt.CallPolicy(retries=4, call_timeout_s=0.5))
+    assert flaky.faults_injected > 0
+    assert _fingerprint_filter(r1) == _fingerprint_filter(r0)
+    # each faulted attempt billed exactly the deadline it burned
+    assert any(lat == 0.5 for _, lat in m1.call_log)
+    with pytest.raises(rt.CallTimeoutError):
+        _run(plan, table,
+             {"m*": _backend(flaky=dict(timeout_rate=0.25, seed=9))},
+             policy=rt.CallPolicy(call_timeout_s=0.5))
+
+
+def test_retry_budget_exhaustion_fails_query():
+    """retry_budget=0 turns retries off globally: the first injected
+    fault exhausts the call and the denial is counted."""
+    plan, table = _filter3_plan(), tagged_table("fq3", 48)
+    ctx = rt.ExecutionContext(
+        backends={"m*": _backend(flaky=dict(error_rate=0.25, seed=3))},
+        default_tier="m*", batch_size=BATCH, morsel_size=MORSEL,
+        call_policy=rt.CallPolicy(retries=4, retry_budget=0))
+    disp = ctx.make_dispatcher()
+    try:
+        with pytest.raises(rt.TransientCallError):
+            ex.execute(plan, table, ctx, dispatcher=disp)
+        stats = disp.fault_stats()
+        assert stats["budget_denied"] > 0
+        assert stats["retries"] == 0
+    finally:
+        disp.close()
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker + tier fallback
+# ---------------------------------------------------------------------------
+
+def _two_tier(primary_error=1.0, seed=0):
+    return {"m*": _backend(flaky=dict(error_rate=primary_error,
+                                      seed=seed)),
+            "m3": SimulatedBackend(_spec("m3", 0.4, 1.6), KindOracle(),
+                                   violation_rate=0.0)}
+
+
+def test_breaker_trips_and_degrades_to_fallback_tier():
+    """A dead primary tier trips the breaker after the configured run of
+    consecutive exhaustions; every later call short-circuits to the
+    fallback tier and the query completes with the fallback tier's
+    answers — graceful degradation, not failure."""
+    plan, table = tagged_plan("fbk"), tagged_table("fbk", 32)
+    pol = rt.CallPolicy(retries=1, breaker_threshold=3,
+                        fallback_tier="m3")
+    bs = _two_tier()
+    ctx = rt.ExecutionContext(backends=bs, default_tier="m*",
+                              batch_size=BATCH, morsel_size=MORSEL,
+                              meter=bk.UsageMeter(), call_policy=pol)
+    disp = ctx.make_dispatcher()
+    try:
+        res = ex.execute(tagged_plan("fbk"), table, ctx, dispatcher=disp)
+        stats = disp.fault_stats()
+    finally:
+        disp.close()
+    base = ex.execute(tagged_plan("fbk"), table,
+                      {"m3": SimulatedBackend(_spec("m3", 0.4, 1.6),
+                                              KindOracle(),
+                                              violation_rate=0.0)},
+                      default_tier="m3", batch_size=BATCH,
+                      morsel_size=MORSEL)
+    assert result_fingerprint(res) == result_fingerprint(base)
+    assert stats["breaker_trips"] >= 1
+    assert ("m*", 0) in stats["open_breakers"]
+    assert stats["fallback_calls"] > 0
+    m = ctx.meter
+    assert m.calls("m3") > 0
+    fkeys = [k for k in m.call_keys if k and rt.FALLBACK_KEY_MARK in k]
+    assert len(fkeys) == stats["fallback_calls"]
+
+
+def test_breaker_stops_hammering_doomed_primary():
+    """After the trip, the primary tier sees no further attempts: its
+    observed call count equals threshold * (retries + 1)."""
+    plan, table = tagged_plan("fbk2"), tagged_table("fbk2", 32)
+    pol = rt.CallPolicy(retries=1, breaker_threshold=3,
+                        fallback_tier="m3")
+    bs = _two_tier(seed=1)
+    res, _ = _run(plan, table, bs, policy=pol)
+    assert res.table.n_rows > 0
+    assert bs["m*"].calls_seen == 3 * (pol.retries + 1)
+
+
+def test_breaker_without_fallback_fails_query():
+    """breaker_threshold set but no fallback tier: exhausted calls (and
+    breaker-open short-circuits) surface the failure instead."""
+    plan, table = tagged_plan("fbk3"), tagged_table("fbk3", 16)
+    with pytest.raises(rt.TransientCallError):
+        _run(plan, table, {"m*": _backend(flaky=dict(error_rate=1.0))},
+             policy=rt.CallPolicy(retries=1, breaker_threshold=2))
+
+
+def test_breaker_fallback_observes_costs_under_serving_tier():
+    """CostModel calibration follows the tier that actually served: a
+    degraded run records m3 observations (and none under the faulted
+    attempts, which bill op_kind=None)."""
+    plan, table = tagged_plan("fbk4"), tagged_table("fbk4", 32)
+    cm = CostModel()
+    pol = rt.CallPolicy(retries=1, breaker_threshold=2,
+                        fallback_tier="m3")
+    ctx = rt.ExecutionContext(backends=_two_tier(seed=2),
+                              default_tier="m*", batch_size=BATCH,
+                              morsel_size=MORSEL, cost_model=cm,
+                              call_policy=pol)
+    with ctx:
+        res = ex.execute(plan, table, ctx, dispatcher=ctx.dispatcher())
+    assert res.table.n_rows > 0
+    snap = cm.calibration_state()
+    assert any(tier == "m3" for _, tier in snap)
+    assert all(tier != "m*" for _, tier in snap)
+
+
+# ---------------------------------------------------------------------------
+# Shard failure: kill + requeue
+# ---------------------------------------------------------------------------
+
+class KillerBackend:
+    """Kills one shard of the ambient dispatcher after ``kill_after``
+    observed calls — deterministic mid-run shard loss."""
+
+    def __init__(self, inner, kill_after=4, shard=2):
+        self.inner = inner
+        self.tier = inner.tier
+        self.kill_after = kill_after
+        self.shard = shard
+        self.disp = None
+        self._n = 0
+        self._lock = threading.Lock()
+
+    def __getattr__(self, name):
+        return getattr(self.inner, name)
+
+    def run_values(self, op, values, meter=None, batch_size=1):
+        with self._lock:
+            self._n += 1
+            fire = self._n == self.kill_after
+        if fire and self.disp is not None:
+            self.disp.kill_shard(self.shard)
+        return self.inner.run_values(op, values, meter=meter,
+                                     batch_size=batch_size)
+
+
+@pytest.mark.parametrize("driver", rt.DRIVERS)
+def test_shard_kill_requeues_morsels_query_completes(driver):
+    """Killing one shard of four mid-run reroutes its pending morsels
+    onto the survivors: the query completes, results match the healthy
+    run, and billing stays exactly-once (same total call count)."""
+    plan, table = tagged_plan("skl"), tagged_table("skl", 48)
+    r0, m0 = _run(plan, table, {"m*": _backend()}, driver=driver)
+    kb = KillerBackend(_backend())
+    ctx = rt.ExecutionContext(backends={"m*": kb}, default_tier="m*",
+                              batch_size=BATCH, morsel_size=MORSEL,
+                              driver=driver, shards=4,
+                              meter=bk.UsageMeter())
+    disp = ctx.make_dispatcher()
+    kb.disp = disp
+    try:
+        res = ex.execute(plan, table, ctx, dispatcher=disp)
+        assert disp.is_dead(2)
+        assert disp.live_shards() == [0, 1, 3]
+    finally:
+        disp.close()
+    assert result_fingerprint(res) == result_fingerprint(r0)
+    assert ctx.meter.total.calls == m0.total.calls
+    assert _totals_key(ctx.meter) == _totals_key(m0)
+
+
+def test_shard_kill_merged_log_matches_healthy_run():
+    """Under the simulated driver the requeued run's merged call log is
+    byte-identical to the healthy run: logical keys don't encode the
+    shard, so rerouting is invisible to the bill."""
+    plan, table = tagged_plan("skl2"), tagged_table("skl2", 48)
+    _, m0 = _run(plan, table, {"m*": _backend()})
+    kb = KillerBackend(_backend(), kill_after=3, shard=1)
+    ctx = rt.ExecutionContext(backends={"m*": kb}, default_tier="m*",
+                              batch_size=BATCH, morsel_size=MORSEL,
+                              shards=4, meter=bk.UsageMeter())
+    disp = ctx.make_dispatcher()
+    kb.disp = disp
+    try:
+        ex.execute(plan, table, ctx, dispatcher=disp)
+    finally:
+        disp.close()
+    assert _log_key(ctx.meter) == _log_key(m0)
+
+
+def test_shard_kill_last_live_shard_is_refused():
+    ctx = rt.ExecutionContext(backends={"m*": _backend()},
+                              default_tier="m*", shards=2)
+    disp = ctx.make_dispatcher()
+    try:
+        disp.kill_shard(0)
+        with pytest.raises(ValueError, match="last live shard"):
+            disp.kill_shard(1)
+        with pytest.raises(ValueError):
+            disp.kill_shard(7)
+    finally:
+        disp.close()
+
+
+def test_shard_failure_threshold_marks_shard_dead():
+    """shard_failure_threshold: enough consecutive call failures on one
+    shard retire it automatically (liveness detection without an
+    explicit kill), and the query still fails-fast its own error."""
+    plan, table = tagged_plan("sft"), tagged_table("sft", 48)
+    pol = rt.CallPolicy(shard_failure_threshold=2)
+    assert not pol.active      # detection alone doesn't re-key billing
+    bs = {"m*": _backend(flaky=dict(error_rate=1.0, seed=4))}
+    ctx = rt.ExecutionContext(backends=bs, default_tier="m*",
+                              batch_size=BATCH, morsel_size=MORSEL,
+                              shards=4, call_policy=pol)
+    disp = ctx.make_dispatcher()
+    try:
+        with pytest.raises(rt.TransientCallError):
+            ex.execute(plan, table, ctx, dispatcher=disp)
+        assert len(disp.live_shards()) < 4
+    finally:
+        disp.close()
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: coalescer poison unwinds in-flight batches
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("driver", rt.DRIVERS)
+def test_coalescer_poison_completes_inflight_batches(driver):
+    """A morsel that fails after the coalescer accepted its rows must
+    not strand sibling rows sharing its batches: the run raises the
+    poison promptly (no deadlock) under both drivers."""
+    plan, table = tagged_plan("cpo"), tagged_table("cpo", 48)
+    bs = {"m*": _backend(flaky=dict(poison_values=["cpo-13"]))}
+    t0 = time.perf_counter()
+    with pytest.raises(rt.TransientCallError, match="poisoned"):
+        _run(plan, table, bs, driver=driver, coalesce=True)
+    assert time.perf_counter() - t0 < 30.0
+
+
+def test_coalescer_poison_is_deterministic_under_simulated():
+    """Two poisoned coalesced runs bill identically before failing: the
+    unwind path is deterministic, not a race."""
+    plan, table = tagged_plan("cpo2"), tagged_table("cpo2", 48)
+    logs = []
+    for _ in range(2):
+        m = bk.UsageMeter()
+        with pytest.raises(rt.TransientCallError):
+            ex.execute(plan, table,
+                       {"m*": _backend(flaky=dict(
+                           poison_values=["cpo2-13"]))},
+                       default_tier="m*", batch_size=BATCH,
+                       morsel_size=MORSEL, meter=m, coalesce=True)
+        logs.append(_log_key(m))
+    assert logs[0] == logs[1]
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: cascade embed faults degrade, never fail
+# ---------------------------------------------------------------------------
+
+def _cascade_router(oracle, error_rate, seed=0):
+    embed = FlakyBackend(
+        casc.EmbeddingBackend(encoder=EmbeddingOracle(oracle)),
+        error_rate=error_rate, seed=seed)
+    return casc.CascadeRouter(embed,
+                              default_bands=casc.CascadeBands(lo=-2.0,
+                                                              hi=2.0))
+
+
+@pytest.mark.parametrize("driver", rt.DRIVERS)
+@pytest.mark.parametrize("rate", (0.5, 1.0))
+def test_cascade_embed_fault_sweep_degrades_not_fails(driver, rate):
+    """FlakyBackend-injected embedding failures at any rate degrade the
+    affected morsels to plain LLM escalation: the query completes and
+    results equal the no-cascade run (all-escalate bands make the
+    healthy cascade path equivalent too)."""
+    plan, table = tagged_plan("cef"), tagged_table("cef", 48)
+    r0, _ = _run(plan, table, {"m*": _backend()}, driver=driver)
+    router = _cascade_router(KindOracle(), error_rate=rate)
+    res, _ = _run(plan, table, {"m*": _backend()}, driver=driver,
+                  cascade=router)
+    assert result_fingerprint(res) == result_fingerprint(r0)
+    assert res.cascade_stats["embed_failures"] > 0
+    if rate >= 1.0:
+        assert res.cascade_stats["embed_calls"] == 0
+
+
+def test_cascade_embed_total_fault_matches_no_cascade_billing():
+    """error_rate=1.0 on the embed tier: every morsel degrades, so the
+    LLM tier sees exactly the un-cascaded workload."""
+    plan, table = tagged_plan("cef2"), tagged_table("cef2", 48)
+    _, m0 = _run(plan, table, {"m*": _backend()})
+    router = _cascade_router(KindOracle(), error_rate=1.0)
+    res, m1 = _run(plan, table, {"m*": _backend()}, cascade=router)
+    assert m1.calls("m*") == m0.calls("m*")
+    assert res.cascade_stats["embed_failures"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: drain deadline
+# ---------------------------------------------------------------------------
+
+def test_server_drain_respects_shared_deadline_fault():
+    """drain(timeout=) is ONE deadline across all handles: with slow
+    in-flight queries it raises TimeoutError within the budget instead
+    of overshooting per-handle."""
+    backend = SleepBackend(KindOracle(), delay_s=0.12)
+    ctx = rt.ExecutionContext(backends={"m*": backend},
+                              default_tier="m*", driver="threads",
+                              concurrency=2, morsel_size=8)
+    server = QueryServer(ctx)
+    try:
+        handles = [server.submit(tagged_plan(f"dr{i}"),
+                                 tagged_table(f"dr{i}", 16))
+                   for i in range(3)]
+        t0 = time.perf_counter()
+        with pytest.raises(TimeoutError):
+            server.drain(timeout=0.15)
+        assert time.perf_counter() - t0 < 1.0
+        for h in handles:
+            h.result(timeout=30)
+    finally:
+        server.close()
+
+
+# ---------------------------------------------------------------------------
+# Serving surface: policy on the server, stats, CLI knobs
+# ---------------------------------------------------------------------------
+
+def test_server_retries_faults_across_tenants():
+    """A CallPolicy on the server context covers every admitted query:
+    under a seeded 10%+ fault plan all queries succeed with solo
+    fault-free results, and the server's stats() reports the fault
+    counters."""
+    specs = [("sva", False), ("svb", True)]
+    want = {}
+    for tag, tail in specs:
+        r, _ = _run(tagged_plan(tag, tail), tagged_table(tag, 24),
+                    {"m*": _backend()}, driver="threads")
+        want[tag] = result_fingerprint(r)
+    flaky = _backend(flaky=dict(error_rate=0.15, seed=2))
+    ctx = rt.ExecutionContext(backends={"m*": flaky}, default_tier="m*",
+                              batch_size=BATCH, morsel_size=MORSEL,
+                              driver="threads", shards=2,
+                              call_policy=rt.CallPolicy(retries=4))
+    with QueryServer(ctx) as server:
+        handles = {tag: server.submit(tagged_plan(tag, tail),
+                                      tagged_table(tag, 24), name=tag)
+                   for tag, tail in specs}
+        got = {tag: result_fingerprint(h.result(timeout=30))
+               for tag, h in handles.items()}
+        stats = server.stats()
+    assert got == want
+    assert flaky.faults_injected > 0
+    assert stats["faults"]["retries"] > 0
+    assert stats["faults"]["attempts"] > 0
+
+
+def test_server_stats_omit_faults_when_failfast():
+    ctx = rt.ExecutionContext(backends={"m*": _backend()},
+                              default_tier="m*", driver="simulated")
+    with QueryServer(ctx) as server:
+        server.submit(tagged_plan("nf"), tagged_table("nf", 8)) \
+              .result(timeout=30)
+        assert "faults" not in server.stats()
+
+
+def test_serve_cli_exposes_fault_knobs():
+    from repro.launch.serve import build_parser
+    args = build_parser().parse_args(
+        ["--semantic", "movie", "--retries", "2", "--call-timeout",
+         "1.5", "--breaker-threshold", "4", "--fallback-tier", "m3"])
+    assert args.retries == 2 and args.call_timeout == 1.5
+    assert args.breaker_threshold == 4 and args.fallback_tier == "m3"
+    d = build_parser().parse_args([])
+    assert d.retries == 0 and d.call_timeout is None
+    assert d.breaker_threshold == 0 and d.fallback_tier is None
+
+
+# ---------------------------------------------------------------------------
+# Calibration integrity under faults
+# ---------------------------------------------------------------------------
+
+def test_cost_model_calibration_unaffected_by_retried_faults():
+    """Faulted attempts bill op_kind=None, so CostModel.observe folds a
+    faulted-but-recovered run into the same calibration state as the
+    fault-free run (same observation count per tier)."""
+    plan, table = _filter3_plan("fcm"), tagged_table("fcm", 48)
+
+    def observed(backends, policy):
+        cm = CostModel()
+        ctx = rt.ExecutionContext(backends=backends, default_tier="m*",
+                                  batch_size=BATCH, morsel_size=MORSEL,
+                                  cost_model=cm, call_policy=policy)
+        with ctx:
+            ex.execute(plan, table, ctx, dispatcher=ctx.dispatcher())
+        return cm.calibration_state()
+
+    clean = observed({"m*": _backend()}, None)
+    faulted = observed(
+        {"m*": _backend(flaky=dict(error_rate=0.25, seed=3))},
+        rt.CallPolicy(retries=4))
+    assert clean == faulted
