@@ -14,19 +14,32 @@ A selective filter -> map -> filter pipeline runs at
   4 shards must deliver a >= 1.5x measured speedup with byte-identical
   results.
 
+A third section locates the **GIL knee**: the same pipeline plus a
+host-UDF tail over a ``testing.GilBoundBackend`` — every call holds a
+process-global lock for its compute (the GIL model; see the fake's
+docstring for why modeled rather than burned CPU). Thread shards cannot
+scale this workload at any width (one interpreter, one lock); process
+shard workers (``driver="procs"``) must deliver >= 1.8x measured wall at
+4 workers vs 4 thread shards, with byte-identical results across both
+substrates and all shard counts.
+
 Writes ``artifacts/bench/BENCH_shard.json`` (one row per config) and a
-repo-root ``BENCH_shard.json`` summary for the perf trajectory.
+repo-root ``BENCH_shard.json`` summary for the perf trajectory
+(refreshed into ``BENCH_trajectory.json``).
 """
 from __future__ import annotations
 
 import json
 import os
+import time
 
 from repro.core import backends as bk
 from repro.core import executor as ex
 from repro.core import plan as plan_ir
 from repro.data import load_dataset
-from repro.testing import SleepBackend
+from repro import testing
+from repro.distributed.morsel_shards import ShardedDispatcher
+from repro.testing import GilBoundBackend, SleepBackend
 
 from benchmarks import common
 
@@ -106,6 +119,60 @@ def run(max_rows: int = 96, sleep_s: float = 0.02):
     if threads_results[4] != threads_results[1]:
         raise AssertionError("threads sharding changed the answer")
 
+    # -- GIL-bound workload: the thread-scaling knee vs process workers --
+    # parse/host-UDF-heavy shape: every LLM call holds the GIL-model lock
+    # for its compute, plus a host-UDF tail that crosses the process
+    # boundary under the procs driver. Built from the picklable testing
+    # fakes (KindOracle) — the dataset InstructionOracle registers local
+    # closures and cannot ship to worker processes.
+    gil_table = testing.tagged_table("gil", max_rows)
+    gil_plan = plan_ir.LogicalPlan((
+        plan_ir.Operator(plan_ir.FILTER, "keep-gil", "v"),
+        plan_ir.Operator(plan_ir.MAP, "annotate-gil", "v", "a"),
+        plan_ir.Operator(plan_ir.MAP, "canonicalize casing", "a", "b",
+                         udf="lambda x: str(x).upper()"),))
+
+    def gil_key(res):
+        t = res.table
+        return (tuple(t.columns[ex.ROWID]),
+                tuple(map(str, t.columns["a"])),
+                tuple(map(str, t.columns["b"])))
+
+    gil_results, gil_walls = {}, {}
+    for driver in ("threads", "procs"):
+        for shards in SHARD_COUNTS:
+            backend = GilBoundBackend(testing.KindOracle(), work_s=0.004)
+            # dispatcher built outside the timed region: spawn cost is a
+            # per-server startup price, not per-query wall
+            disp = ShardedDispatcher(shards=shards, driver=driver,
+                                     concurrency=4,
+                                     backends={"m*": backend})
+            walls, meter, res = [], None, None
+            try:
+                for _ in range(3):      # median of 3: scheduling jitter
+                    meter = bk.UsageMeter()
+                    t0 = time.perf_counter()
+                    res = ex.execute(gil_plan, gil_table, {"m*": backend},
+                                     default_tier="m*", batch_size=1,
+                                     morsel_size=MORSEL, meter=meter,
+                                     dispatcher=disp)
+                    walls.append(time.perf_counter() - t0)
+            finally:
+                disp.close()
+            gil_results[(driver, shards)] = gil_key(res)
+            gil_walls[(driver, shards)] = sorted(walls)[1]
+            rows.append({
+                "driver": f"{driver}-gil", "batch": 1, "shards": shards,
+                "calls": meter.total.calls,
+                "usd": round(meter.total.usd, 6),
+                "wall_s": round(sorted(walls)[1], 4),
+                "walls": [round(w, 4) for w in walls]})
+    if len(set(gil_results.values())) != 1:
+        raise AssertionError(
+            "GIL-bound results differ across substrates/shard counts")
+    gil_speedup = gil_walls[("threads", 4)] / max(gil_walls[("procs", 4)],
+                                                  1e-9)
+
     def row_of(driver, batch, shards):
         return next(r for r in rows if r["driver"] == driver
                     and r["batch"] == batch and r["shards"] == shards)
@@ -122,20 +189,35 @@ def run(max_rows: int = 96, sleep_s: float = 0.02):
         "simulated_calls_batch1": row_of("simulated", 1, 1)["calls"],
         "simulated_calls_batch8": row_of("simulated", 8, 1)["calls"],
         "results_identical_across_shards": True,
+        "gil_threads_walls_s": {s: round(gil_walls[("threads", s)], 4)
+                                for s in SHARD_COUNTS},
+        "gil_procs_walls_s": {s: round(gil_walls[("procs", s)], 4)
+                              for s in SHARD_COUNTS},
+        "gil_procs_speedup_4w_vs_4threads": round(gil_speedup, 3),
     }
     rows.append(summary)
     common.emit("BENCH_shard", rows)
     with open(ROOT_SUMMARY, "w") as f:
         json.dump(summary, f, indent=1)
+    common.write_trajectory()
     print(common.fmt_table(
         [r for r in rows if r["driver"] != "summary"],
         ["driver", "batch", "shards", "calls", "usd", "wall_s"]))
     print(f"[bench_shard] threads wall {t1['wall_s']:.3f}s (1 shard) -> "
           f"{t4['wall_s']:.3f}s (4 shards): {speedup:.2f}x speedup, "
           f"byte-identical results")
+    print(f"[bench_shard] GIL-bound: threads "
+          f"{gil_walls[('threads', 1)]:.3f}s / "
+          f"{gil_walls[('threads', 4)]:.3f}s (1 / 4 shards — the knee) vs "
+          f"procs {gil_walls[('procs', 4)]:.3f}s (4 workers): "
+          f"{gil_speedup:.2f}x past the knee")
     if speedup < 1.5:
         raise AssertionError(
             f"4-shard threads speedup {speedup:.2f}x < 1.5x target")
+    if gil_speedup < 1.8:
+        raise AssertionError(
+            f"4-process-worker GIL-bound speedup {gil_speedup:.2f}x "
+            f"< 1.8x target")
     return rows
 
 

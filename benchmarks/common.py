@@ -328,6 +328,35 @@ def emit(name: str, rows: List[dict]) -> None:
     print(f"[{name}] wrote {len(rows)} rows -> {path}", file=sys.stderr)
 
 
+# repo root, where benchmark modules drop their headline BENCH_*.json files
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRAJECTORY = os.path.join(ROOT, "BENCH_trajectory.json")
+
+
+def write_trajectory() -> dict:
+    """Aggregate every root ``BENCH_*.json`` into one machine-readable
+    ``BENCH_trajectory.json`` keyed by benchmark name, so the perf
+    trajectory across PRs is a single document instead of a glob. Lives
+    here (not ``benchmarks.run``) so a single benchmark module can
+    refresh the trajectory without importing the whole aggregator."""
+    import glob
+    doc = {}
+    for path in sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        if name == "trajectory":
+            continue
+        try:
+            with open(path) as f:
+                doc[name] = json.load(f)
+        except (OSError, ValueError) as e:
+            doc[name] = {"error": f"{type(e).__name__}: {e}"}
+    with open(TRAJECTORY, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"[trajectory] {len(doc)} benchmark files -> {TRAJECTORY}",
+          file=sys.stderr)
+    return doc
+
+
 def fmt_table(rows: List[dict], cols: List[str]) -> str:
     widths = {c: max(len(c), *(len(f"{r.get(c, '')}") for r in rows))
               for c in cols}

@@ -8,39 +8,12 @@ per-benchmark JSON artifacts under artifacts/bench/.
 from __future__ import annotations
 
 import argparse
-import glob
-import json
-import os
 import sys
 import time
 import traceback
 
 from benchmarks import common
-
-# repo root, where benchmark modules drop their headline BENCH_*.json files
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-TRAJECTORY = os.path.join(ROOT, "BENCH_trajectory.json")
-
-
-def write_trajectory() -> dict:
-    """Aggregate every root ``BENCH_*.json`` into one machine-readable
-    ``BENCH_trajectory.json`` keyed by benchmark name, so the perf
-    trajectory across PRs is a single document instead of a glob."""
-    doc = {}
-    for path in sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))):
-        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
-        if name == "trajectory":
-            continue
-        try:
-            with open(path) as f:
-                doc[name] = json.load(f)
-        except (OSError, ValueError) as e:
-            doc[name] = {"error": f"{type(e).__name__}: {e}"}
-    with open(TRAJECTORY, "w") as f:
-        json.dump(doc, f, indent=1, sort_keys=True)
-    print(f"[trajectory] {len(doc)} benchmark files -> {TRAJECTORY}",
-          file=sys.stderr)
-    return doc
+from benchmarks.common import ROOT, TRAJECTORY, write_trajectory
 from benchmarks import (appendix_d_search, bench_cascade, bench_coalesce,
                         bench_fault, bench_serve, bench_shard,
                         fig9_fig10_breakdown,

@@ -90,6 +90,23 @@ class UsageMeter:
         self._lock = threading.Lock()
         self._local = threading.local()
 
+    def __getstate__(self):
+        # meters cross process boundaries under the ``procs`` driver:
+        # worker call logs ship back to the coordinator with their
+        # logical keys attached. Lock and thread-local state is
+        # per-process; only the billed data travels.
+        with self._lock:
+            return {"by_tier": {t: dataclasses.replace(u)
+                                for t, u in self.by_tier.items()},
+                    "call_log": list(self.call_log),
+                    "call_keys": list(self.call_keys),
+                    "call_ops": list(self.call_ops)}
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+        self._local = threading.local()
+
     @contextlib.contextmanager
     def keyed(self, key: Optional[tuple]):
         """Attach ``key`` to every call recorded in this thread inside the

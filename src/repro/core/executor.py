@@ -195,6 +195,7 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
             linger_s: Optional[float] = None,
             shards: Optional[int] = None,
             shard_cache: Optional[str] = None,
+            procs: Optional[int] = None,
             cascade=None,
             call_policy: Optional[rt.CallPolicy] = None,
             scheduler: Optional[rt.EventScheduler] = None,
@@ -240,6 +241,7 @@ def execute(plan: plan_ir.LogicalPlan, table: Table,
                               ("linger_s", linger_s),
                               ("shards", shards),
                               ("shard_cache", shard_cache),
+                              ("procs", procs),
                               ("cascade", cascade),
                               ("call_policy", call_policy))
             if v is not None}
@@ -375,11 +377,12 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                 return tbl, ready
             values = tbl.resolve(op.input_column)
             if op.udf is not None:
-                # host UDF morsels pipeline against LLM work but serialize
-                # against each other (one Python process, even sharded)
-                (out_tbl, _), finish = disp.run_host(
-                    lambda: rt.run_udf_op(op, tbl, values), tbl.n_rows,
-                    ready_s=ready, shard=disp.shard_of(idx, query_key))
+                # host UDF morsels pipeline against LLM work; threaded
+                # shards serialize them through one host lock (one
+                # interpreter), process shards run them GIL-free
+                (out_tbl, _), finish = disp.run_udf(
+                    op, tbl, values, ready_s=ready,
+                    shard=disp.shard_of(idx, query_key))
                 return out_tbl, finish
             if casc is not None and casc.active_for(op):
                 part = cascade_partition(op, oi, idx, values, ready)
@@ -416,9 +419,8 @@ def _run(plan: plan_ir.LogicalPlan, table: Table, ctx: rt.ExecutionContext,
                 values = tbl.columns.get(op.input_column, []) \
                     if tbl.n_rows == 0 else tbl.resolve(op.input_column)
                 if op.udf is not None:
-                    (tbl, out), finish = disp.run_host(
-                        lambda t=tbl, v=values: rt.run_udf_op(op, t, v),
-                        tbl.n_rows, ready_s=ready)
+                    (tbl, out), finish = disp.run_udf(
+                        op, tbl, values, ready_s=ready)
                 else:
                     part = None
                     if (casc is not None and tbl.n_rows > 0

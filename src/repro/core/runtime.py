@@ -596,7 +596,9 @@ def run_backend_calls(op: plan_ir.Operator, values: Sequence[Any], backend,
                       fanout: Optional[Callable] = None,
                       key: Optional[tuple] = None,
                       policy: Optional[FaultPolicyRuntime] = None,
-                      tier_name: str = "", shard: int = 0) -> List[Any]:
+                      tier_name: str = "", shard: int = 0,
+                      positions: Optional[Sequence[int]] = None,
+                      on_chunk: Optional[Callable] = None) -> List[Any]:
     """Invoke the backend over ``values``. Without a ``fanout`` the whole
     request is one inline ``run_values`` (the backend batches internally).
     With a ``fanout`` — a callable mapping a list of thunks to their results,
@@ -618,7 +620,20 @@ def run_backend_calls(op: plan_ir.Operator, values: Sequence[Any], backend,
     each chunk under ``key + (j,)`` — normalizing the per-attempt key shape
     across drivers so a seeded fault plan draws identically under both
     (without a policy the inline path is byte-identical to the pre-policy
-    runtime, including key shapes)."""
+    runtime, including key shapes).
+
+    ``positions`` (parallel to ``values``) are each value's index in the
+    call site's *full* row set — the cache layer passes the ``own``
+    indices so a value set that is a union of whole original chunks
+    (e.g. a shard-death requeue whose completed chunks now cache-hit)
+    bills each chunk under its ORIGINAL index, keeping the merged log
+    byte-identical to a healthy run. When the chunk-aligned grouping
+    does not reproduce the compact chunking (cache holes inside a
+    chunk), compact indices are kept — exactly the pre-existing
+    behaviour. ``on_chunk(chunk_positions, chunk_outputs)`` fires the
+    moment each chunk's call returns (on the pool thread under a
+    ``fanout``); the cache layer uses it for incremental publishing so
+    sibling-chunk failure never discards completed work."""
     values = list(values)
     policed = policy is not None and policy.policy.active
     if fanout is None and not policed:
@@ -629,26 +644,41 @@ def run_backend_calls(op: plan_ir.Operator, values: Sequence[Any], backend,
             return backend.run_values(op, values, meter=meter,
                                       batch_size=batch_size)
     if op.kind == plan_ir.REDUCE:
-        chunks = [values]
+        groups = [(0, list(range(len(values))))]
     else:
         step = max(1, int(batch_size))
-        chunks = [values[i:i + step] for i in range(0, len(values), step)]
+        compact = [list(range(i, min(i + step, len(values))))
+                   for i in range(0, len(values), step)]
+        groups = list(enumerate(compact))
+        if positions is not None:
+            by_chunk: Dict[int, List[int]] = {}
+            for idx, p in enumerate(positions):
+                by_chunk.setdefault(p // step, []).append(idx)
+            aligned = sorted(by_chunk.items())
+            if [g for _, g in aligned] == compact:
+                groups = aligned
 
-    def call(c, j):
+    def call(idxs, j):
+        c = [values[i] for i in idxs]
         ck = None if key is None else tuple(key) + (j,)
         if policed:
-            return policy.invoke(backend, tier_name, op, c, meter,
-                                 batch_size, ck, shard=shard)
-        if ck is None:
-            return backend.run_values(op, c, meter=meter,
-                                      batch_size=batch_size)
-        with meter.keyed(ck):
-            return backend.run_values(op, c, meter=meter,
-                                      batch_size=batch_size)
+            out = policy.invoke(backend, tier_name, op, c, meter,
+                                batch_size, ck, shard=shard)
+        elif ck is None:
+            out = backend.run_values(op, c, meter=meter,
+                                     batch_size=batch_size)
+        else:
+            with meter.keyed(ck):
+                out = backend.run_values(op, c, meter=meter,
+                                         batch_size=batch_size)
+        if on_chunk is not None and positions is not None:
+            on_chunk([positions[i] for i in idxs], out)
+        return out
 
     if fanout is None:
-        return [o for j, c in enumerate(chunks) for o in call(c, j)]
-    thunks = [(lambda c=c, j=j: call(c, j)) for j, c in enumerate(chunks)]
+        return [o for j, idxs in groups for o in call(idxs, j)]
+    thunks = [(lambda idxs=idxs, j=j: call(idxs, j))
+              for j, idxs in groups]
     return [o for part in fanout(thunks) for o in part]
 
 
@@ -721,10 +751,20 @@ def run_llm_op(op: plan_ir.Operator, values, backend, tier_name: str,
     outs: List[Any] = [None] * len(values)
     try:
         if own:
+            def publish_chunk(poss, got_c):
+                # incremental publish: a chunk's outputs become cache
+                # hits the moment its call returns, so a requeued morsel
+                # whose sibling chunks died (shard loss) re-resolves the
+                # completed chunks as hits instead of re-billing them —
+                # the exactly-once guarantee for partial fanout failure
+                for p, o in zip(poss, got_c):
+                    cache.publish(keys[p], o)
+
             got = run_backend_calls(op, [values[i] for i in own], backend,
                                     meter, batch_size, fanout, key=key,
                                     policy=policy, tier_name=tier_name,
-                                    shard=shard)
+                                    shard=shard, positions=own,
+                                    on_chunk=publish_chunk)
             for i, o in zip(own, got):
                 outs[i] = o
                 cache.publish(keys[i], o)
@@ -915,6 +955,15 @@ class Dispatcher:
     def done(self, value, finish: float = 0.0) -> _DoneTask:
         return _DoneTask(value, finish)
 
+    def run_udf(self, op, table, values, ready_s: float = 0.0,
+                shard: int = 0):
+        """One compiled-UDF operator step. Default: host work under
+        :meth:`run_host` (simulated cost model / host-lock serialization).
+        The ``procs`` driver overrides this to execute the step in a
+        worker process, GIL-free. Returns ``((table, scalar), finish_s)``."""
+        return self.run_host(lambda: run_udf_op(op, table, values),
+                             table.n_rows, ready_s=ready_s, shard=shard)
+
     def occupancy(self) -> Dict[str, List[float]]:
         """Per-tier busy-until offsets (seconds of remaining work per
         occupied worker slot) for seeding a ``CostModel`` makespan replay.
@@ -1025,6 +1074,12 @@ class ThreadPoolDispatcher(Dispatcher):
         # one Python interpreter no matter how many shards dispatch it)
         self._host_lock = host_lock if host_lock is not None \
             else threading.Lock()
+        # in-flight backend-call tracking for occupancy(): tier ->
+        # {flight id: start perf_counter}, plus a per-tier EWMA of call
+        # duration to turn "started t ago" into "busy for ~d more"
+        self._inflight: Dict[str, Dict[int, float]] = {}
+        self._ewma: Dict[str, float] = {}
+        self._seq = 0
         self._t0 = time.perf_counter()
         self._last = self._t0
 
@@ -1048,11 +1103,48 @@ class ThreadPoolDispatcher(Dispatcher):
             if now > self._last:
                 self._last = now
 
+    def _tracked(self, tier_name: str, thunk):
+        """Wrap a tier-pool thunk so occupancy() can see it in flight."""
+        def run():
+            with self._lock:
+                self._seq += 1
+                tid = self._seq
+                self._inflight.setdefault(tier_name, {})[tid] = \
+                    time.perf_counter()
+            try:
+                return thunk()
+            finally:
+                now = time.perf_counter()
+                with self._lock:
+                    t0 = self._inflight.get(tier_name, {}).pop(tid, now)
+                    prev = self._ewma.get(tier_name)
+                    dt = now - t0
+                    self._ewma[tier_name] = dt if prev is None \
+                        else 0.8 * prev + 0.2 * dt
+        return run
+
+    def occupancy(self) -> Dict[str, List[float]]:
+        """Estimated remaining-busy offsets per tier from calls currently
+        in flight: EWMA(call duration) minus elapsed, floored at ~0 —
+        the measured-driver analogue of the event scheduler's busy-until
+        pool state, good enough to seed a makespan replay."""
+        now = time.perf_counter()
+        with self._lock:
+            out: Dict[str, List[float]] = {}
+            for tier, flights in self._inflight.items():
+                if not flights:
+                    continue
+                est = self._ewma.get(tier, 0.0)
+                out[tier] = sorted(max(est - (now - t0), 1e-6)
+                                   for t0 in flights.values())
+            return out
+
     def fanout(self, tier_name: str) -> Callable:
         pool = self._pool(tier_name)
 
         def fan(thunks):
-            futs = [pool.submit(t) for t in thunks]
+            futs = [pool.submit(self._tracked(tier_name, t))
+                    for t in thunks]
             # settle EVERY thunk before surfacing the first failure: a
             # caller's cleanup (per-query meter finalize on a shared
             # dispatcher) must not run while sibling chunks of the same
@@ -1353,7 +1445,7 @@ class _OpGroup:
         occupy a tier worker (same liveness structure as morsel chains)."""
         if not batches:
             return
-        if len(batches) == 1 or self.coal.disp.kind != "threads":
+        if len(batches) == 1 or self.coal.disp.kind == "simulated":
             for b in batches:
                 self._run_batch(b)
             return
@@ -1541,7 +1633,7 @@ class BatchCoalescer:
                          op_key=op_key)
             self._groups.append(g)
             need_tick = (self.linger_s is not None
-                         and self.disp.kind == "threads"
+                         and self.disp.kind != "simulated"
                          and not self._ticking)
             if need_tick:
                 self._ticking = True
@@ -1620,6 +1712,13 @@ class ExecutionContext:
     (each shard memoizes independently — cheaper coordination, duplicate
     billing across shards).
 
+    ``procs >= 1`` selects the third execution substrate: a
+    ``ShardedDispatcher`` whose per-shard inner workers are spawned
+    subprocesses (``distributed.process_workers``) — backend calls and
+    host UDFs run GIL-free in the workers while the coordinator keeps
+    the shared cache, fault policy, and meter merge. Mutually exclusive
+    with ``shards > 1`` (both pick a shard topology).
+
     ``cascade`` (a ``core.cascade.CascadeRouter`` or None) enables the
     tier-0 embedding cascade: SEM_FILTER/RANK operators with bands score
     every morsel in one batched device pass and only the uncertain band
@@ -1637,6 +1736,9 @@ class ExecutionContext:
     linger_s: Optional[float] = None
     shards: int = 1
     shard_cache: str = "shared"
+    # > 0: that many process shard workers (GIL-free morsel execution);
+    # the `driver` field then only governs any coordinator-side work
+    procs: int = 0
     cascade: Optional[Any] = None
     cache: Optional[OutputCache] = None
     # the calibrated estimation surface (core.cost_model.CostModel) this
@@ -1682,7 +1784,23 @@ class ExecutionContext:
         if self.call_policy is not None and self.call_policy.active:
             policy_rt = FaultPolicyRuntime(
                 self.call_policy, backends=self.backends,
-                real_time=(self.driver == "threads"))
+                real_time=(self.driver == "threads" or self.procs >= 1))
+        if self.procs >= 1:
+            if self.shards > 1:
+                raise ValueError(
+                    "procs and shards are mutually exclusive (both pick "
+                    f"a shard topology; got procs={self.procs}, "
+                    f"shards={self.shards})")
+            from repro.distributed.morsel_shards import ShardedDispatcher
+            return ShardedDispatcher(
+                shards=self.procs, driver="procs",
+                concurrency=self.concurrency,
+                per_tier=self.per_tier_concurrency, mode=self.mode,
+                shared_cache=self.shard_cache != "local",
+                policy=policy_rt,
+                failure_threshold=(self.call_policy.shard_failure_threshold
+                                   if self.call_policy else None),
+                backends=self.backends)
         if self.shards > 1:
             # local import: morsel_shards builds on this module
             from repro.distributed.morsel_shards import ShardedDispatcher

@@ -36,6 +36,13 @@ Drivers
   compute stays one global worker), driven through per-shard
   ``SimulatedDispatcher`` views — so Table-9 accounting stays a single
   deterministic event replay.
+* ``procs``: one ``distributed.process_workers.ProcessShardDispatcher``
+  per shard — the threads topology, but each shard's backend calls and
+  host UDFs execute in a spawned worker *subprocess* (GIL-free; no
+  shared host lock — each worker is its own interpreter). Worker death
+  surfaces through :meth:`kill_shard` exactly like an explicit kill, so
+  the requeue/exactly-once story below carries over verbatim. Requires
+  ``backends`` so the picklable ones can ship to the workers at spawn.
 
 Shard-count invariance
 ----------------------
@@ -63,7 +70,7 @@ from __future__ import annotations
 
 import threading
 from concurrent.futures import CancelledError
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core import backends as bk
 from repro.core import runtime as rt
@@ -226,10 +233,13 @@ class ShardedDispatcher(rt.Dispatcher):
                  per_tier: Optional[Dict[str, int]] = None,
                  mode: str = "async", shared_cache: bool = True,
                  policy: Optional[rt.FaultPolicyRuntime] = None,
-                 failure_threshold: Optional[int] = None):
-        if driver not in rt.DRIVERS:
+                 failure_threshold: Optional[int] = None,
+                 backends: Optional[Dict[str, Any]] = None,
+                 heartbeat_s: float = 0.25,
+                 heartbeat_timeout_s: float = 10.0):
+        if driver not in (*rt.DRIVERS, "procs"):
             raise ValueError(f"unknown driver {driver!r} "
-                             f"(expected one of {rt.DRIVERS})")
+                             f"(expected one of {(*rt.DRIVERS, 'procs')})")
         self.n_shards = max(1, int(shards))
         self.kind = driver
         self.concurrency = max(1, int(concurrency))
@@ -260,6 +270,29 @@ class ShardedDispatcher(rt.Dispatcher):
                 rt.SimulatedDispatcher(_ShardSchedulerView(self._sched, s),
                                        policy=policy)
                 for s in range(self.n_shards)]
+        elif driver == "procs":
+            # local import: process_workers builds on this module's deps
+            from repro.distributed.process_workers import (
+                ProcessShardDispatcher, shippable_backends)
+            ship = shippable_backends(backends or {})
+            self._inner = [
+                ProcessShardDispatcher(
+                    self.concurrency,
+                    per_tier={t: split_quota(q, self.n_shards)[s]
+                              for t, q in self.per_tier.items()},
+                    mode=mode, policy=policy,
+                    backends=ship, shard=s,
+                    on_death=self._on_worker_death,
+                    heartbeat_s=heartbeat_s,
+                    heartbeat_timeout_s=heartbeat_timeout_s)
+                for s in range(self.n_shards)]
+            try:
+                for d in self._inner:
+                    d.wait_ready()
+            except BaseException:
+                for d in self._inner:
+                    d.close()
+                raise
         else:
             host_lock = threading.Lock()
             self._inner = [
@@ -335,6 +368,20 @@ class ShardedDispatcher(rt.Dispatcher):
         abandon = getattr(self._inner[shard], "abandon", None)
         if abandon is not None:
             abandon()
+
+    def _on_worker_death(self, shard: int) -> None:
+        """Process-worker death callback (crash / SIGKILL / missed
+        heartbeat), invoked by the ``ProcessShardClient`` monitor
+        *before* it fails the shard's pending call futures — so by the
+        time a caller sees ``ShardDeadError``, the shard is already
+        marked dead and ``_shard_died_under`` routes the retry to a
+        survivor. Losing the last live shard (or dying mid-construction)
+        is not recoverable by requeue; those calls then fail with the
+        worker's ``ShardDeadError``."""
+        try:
+            self.kill_shard(shard)
+        except (ValueError, AttributeError):
+            pass
 
     def _shard_died_under(self, shard: int, exc: BaseException) -> bool:
         """Whether ``exc`` means "this shard's pools were torn down",
@@ -444,6 +491,47 @@ class ShardedDispatcher(rt.Dispatcher):
                  shard: int = 0):
         return self._inner[self._route(shard)].run_host(
             fn, n_rows, ready_s=ready_s)
+
+    def run_udf(self, op, table, values, ready_s: float = 0.0,
+                shard: int = 0):
+        """UDF steps route like backend calls — under ``procs`` they run
+        in the shard's worker process, and a shard dying mid-step retries
+        on the ring-next survivor (UDF steps are pure functions of their
+        inputs, so a re-run is exactly-once by construction)."""
+        while True:
+            s = self._route(shard)
+            try:
+                return self._inner[s].run_udf(op, table, values,
+                                              ready_s=ready_s, shard=s)
+            except BaseException as e:
+                if self._shard_died_under(s, e):
+                    shard = s
+                    continue
+                raise
+
+    def occupancy(self) -> Dict[str, List[float]]:
+        """Merged per-tier busy offsets across all shard pools, under the
+        tier's *base* name — a ``CostModel`` makespan replay seeds from
+        one tier-wide slot list no matter the shard topology. (The base
+        class returns ``{}``, which made occupancy-seeded cost estimates
+        assume idle pools exactly on the sharded serving path.)"""
+        out: Dict[str, List[float]] = {}
+        if self._sched is not None:
+            sched = self._sched
+            with sched._elock:
+                now = sched._floor
+                for key, pool in sched._pools.items():
+                    if key in (rt.HOST_TIER, "\x00sync"):
+                        continue
+                    _, base = _decompose(key)
+                    busy = [t - now for t in pool if t > now]
+                    if busy:
+                        out.setdefault(base, []).extend(busy)
+        else:
+            for d in self._inner:
+                for tier, busy in d.occupancy().items():
+                    out.setdefault(tier, []).extend(busy)
+        return {t: sorted(busy) for t, busy in out.items()}
 
     def checkpoint(self, meter: bk.UsageMeter, cursor: int) -> int:
         return self._inner[0].checkpoint(meter, cursor)

@@ -119,6 +119,7 @@ def _semantic_context(args):
                               coalesce=args.coalesce,
                               linger_s=args.linger,
                               shards=args.shards,
+                              procs=args.procs,
                               cascade=router,
                               cost_model=model,
                               call_policy=policy)
@@ -152,7 +153,8 @@ def serve_semantic(args):
     q = WORKLOADS[args.semantic][0]
     print(f"[serve] semantic query {q.qid} over {table.name} "
           f"({table.n_rows} rows), m1 = {cfg.name} on {args.slots} slots, "
-          f"driver={args.driver} shards={args.shards} batch={args.batch} "
+          f"driver={args.driver} shards={args.shards} procs={args.procs} "
+          f"batch={args.batch} "
           f"coalesce={args.coalesce} linger={args.linger} "
           f"cascade={args.cascade}")
     t0 = time.time()
@@ -206,8 +208,8 @@ def serve_queries(args, table, cfg, engine, ctx):
     offsets = stagger_offsets(len(queries), args.stagger, seed=args.seed)
     print(f"[serve] streaming {len(queries)} queries over {table.name} "
           f"({table.n_rows} rows), m1 = {cfg.name} on {args.slots} slots, "
-          f"driver={args.driver} shards={args.shards} batch={args.batch} "
-          f"stagger={args.stagger}s")
+          f"driver={args.driver} shards={args.shards} procs={args.procs} "
+          f"batch={args.batch} stagger={args.stagger}s")
     handles = []
     with QueryServer(ctx) as server:
         t0 = time.perf_counter()
@@ -267,6 +269,13 @@ def build_parser() -> argparse.ArgumentParser:
                          "(pool-per-(shard, tier) dispatch; morsels "
                          "round-robin across shards, results identical "
                          "to --shards 1)")
+    ap.add_argument("--procs", type=int, default=0,
+                    help="--semantic: spawned process shard workers — "
+                         "backend calls and host UDFs run GIL-free in "
+                         "worker subprocesses, results identical to the "
+                         "in-process drivers; mutually exclusive with "
+                         "--shards > 1 (unpicklable backends, e.g. the "
+                         "engine-backed m1, keep running in-process)")
     ap.add_argument("--batch", type=int, default=1,
                     help="--semantic batch prompting size (records per "
                          "LLM call)")

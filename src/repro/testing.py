@@ -182,6 +182,18 @@ class SleepBackend:
         self.groups = []
         self._lock = threading.Lock()
 
+    def __getstate__(self):
+        # picklable for the ``procs`` driver's worker processes; answers
+        # are value-derived (oracles are stateless), so a shipped copy
+        # answers identically to the coordinator's original
+        state = dict(self.__dict__)
+        del state["_lock"]
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+
     def run_values(self, op, values: Sequence, meter=None,
                    batch_size: int = 1):
         values = list(values)
@@ -250,8 +262,24 @@ class FlakyBackend:
         self._lock = threading.Lock()
         self._anon_attempts: dict = {}
 
+    def __getstate__(self):
+        # fault plans are pure functions of (seed, logical key) via a
+        # content hash — a pickled copy in a worker process draws the
+        # exact same plan, so chaos runs stay deterministic over the wire
+        state = dict(self.__dict__)
+        del state["_lock"]
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+
     def __getattr__(self, name):
-        # delegate capability probes etc. (_capability, oracle, ...)
+        # delegate capability probes etc. (_capability, oracle, ...);
+        # never delegate dunders (pickle probes __reduce_ex__ machinery
+        # before __dict__ exists — delegating would recurse on `inner`)
+        if name.startswith("__") or "inner" not in self.__dict__:
+            raise AttributeError(name)
         return getattr(self.inner, name)
 
     def _ident(self, op, values, meter):
@@ -309,3 +337,73 @@ class FlakyBackend:
             time.sleep(self.slow_s)
         return self.inner.run_values(op, values, meter=meter,
                                      batch_size=batch_size)
+
+
+# One lock per *process* (module-level: spawn re-imports this module in
+# each worker, so every worker process gets its own). GilBoundBackend
+# holds it across its modeled compute — the GIL model below.
+_GIL_MODEL_LOCK = threading.Lock()
+
+
+class GilBoundBackend:
+    """Always-correct fake whose per-call work is *GIL-bound by model*:
+    each call sleeps ``work_s`` while holding the process-global
+    :data:`_GIL_MODEL_LOCK`.
+
+    Why model instead of burning CPU: the bench containers often expose
+    a single core, where real CPU-bound work cannot show parallel
+    speedup for *any* execution substrate — the measurement would say
+    nothing about the GIL. This fake models the GIL's defining property
+    directly, the same way :class:`SleepBackend` models I/O with
+    ``time.sleep``: within one Python process, concurrent calls
+    serialize on the lock exactly as bytecode serializes on the GIL
+    (threads driver: total wall ≥ calls × ``work_s`` regardless of pool
+    width); across ``procs`` workers, each spawned process re-imports
+    this module and gets its *own* lock, so calls overlap exactly as
+    separate interpreters escape each other's GIL. ``bench_shard.py``
+    uses it to locate the thread-scaling knee and the process-worker
+    speedup past it.
+
+    Billing mirrors :class:`SleepBackend` (``work_s`` metered latency
+    per call, deterministic token counts), so invariance assertions
+    compare byte-identically across drivers and shard counts."""
+
+    def __init__(self, oracle, work_s: float = 0.004, name: str = "m*",
+                 capability: float = 1.01):
+        self.tier = TierSpec(name, capability, 0.0, 0.0, work_s, 0.0)
+        self.oracle = oracle
+        self.work_s = work_s
+        self.calls_made = 0
+        self._lock = threading.Lock()
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        del state["_lock"]
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+
+    def run_values(self, op, values: Sequence, meter=None,
+                   batch_size: int = 1):
+        values = list(values)
+        if op.kind == plan_ir.REDUCE:
+            n_calls = 1
+            outs = [self.oracle.answer_reduce(op, values)]
+        else:
+            n_calls = max(1, -(-len(values) // batch_size))
+            outs = [self.oracle.answer(op, v) for v in values]
+        for _ in range(n_calls):
+            with _GIL_MODEL_LOCK:      # "hold the GIL" for the work
+                time.sleep(self.work_s)
+        with self._lock:
+            self.calls_made += n_calls
+        if meter is not None:
+            meter.record(self.tier.name,
+                         bk.Usage(calls=n_calls, tok_in=8.0 * len(values),
+                                  tok_out=4.0 * n_calls, usd=0.0,
+                                  latency_s=self.work_s * n_calls),
+                         per_call_latency_s=[self.work_s] * n_calls,
+                         op_kind=op.kind)
+        return outs
