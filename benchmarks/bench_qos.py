@@ -1,0 +1,159 @@
+"""Multi-tenant QoS benchmark — interactive tail latency under a batch
+flood, with and without the admission controller.
+
+Workload on one shared ``QueryServer`` (threads driver, really-sleeping
+backend, 4-wide tier pool):
+
+* a **batch flood**: long filter->map queries admitted all at once by a
+  greedy batch tenant;
+* **interactive probes**: small queries submitted one at a time while
+  the flood is in flight — the latency-sensitive tenant.
+
+Two modes:
+
+* ``no-qos`` — the pre-admission server: every query starts
+  immediately and the probes' backend calls queue behind the entire
+  flood on the shared tier pool;
+* ``qos`` — ``AdmissionController(max_concurrent=1)`` with the probes
+  on the interactive lane: the flood executes one query at a time
+  (same pool, same total work), and every freed slot is offered to the
+  interactive lane first, so a probe waits for at most the query
+  currently running — never the whole flood.
+
+Acceptance (ISSUE 10): interactive p99 improves **>= 3x** under QoS,
+while the flood's results stay byte-identical to running each query
+solo on a fresh context (admission control changes *when* queries run,
+never what they answer). The QoS run also feeds predicted-vs-actual
+makespans back to ``CostModel.observe_makespan``; the summary reports
+the resulting admission q-error so the trajectory tracks gate accuracy.
+
+Writes ``artifacts/bench/BENCH_qos.json`` and a repo-root
+``BENCH_qos.json`` summary for the perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import executor as ex
+from repro.core import runtime as rt
+from repro.core.cost_model import CostModel
+from repro.launch.query_server import AdmissionController, QueryServer
+from repro.testing import (KindOracle, SleepBackend, result_fingerprint,
+                           tagged_plan, tagged_table)
+
+from benchmarks import common
+
+CONCURRENCY = 4
+ROOT_SUMMARY = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_qos.json")
+
+
+def _ctx(delay_s: float) -> rt.ExecutionContext:
+    backend = SleepBackend(KindOracle(), delay_s=delay_s)
+    return rt.ExecutionContext(backends={"m*": backend},
+                               default_tier="m*", concurrency=CONCURRENCY,
+                               morsel_size=8, driver="threads",
+                               cost_model=CostModel())
+
+
+def _serve(mode: str, delay_s: float, flood_specs, probe_specs,
+           probe_gap_s: float):
+    """One server run: flood admitted at t0, probes staggered while it
+    drains. Returns (probe latencies, per-query fingerprints, admission
+    report)."""
+    ctl = None
+    if mode == "qos":
+        ctl = AdmissionController(max_concurrent=1)
+    ctx = _ctx(delay_s)
+    with QueryServer(ctx, max_inflight=16, admission=ctl) as server:
+        floods = [(tag, server.submit(tagged_plan(tag), tagged_table(tag, n),
+                                      name=tag, tenant="batch",
+                                      lane="batch"))
+                  for tag, n in flood_specs]
+        probes = []
+        for tag, n in probe_specs:
+            time.sleep(probe_gap_s)
+            probes.append((tag, server.submit(
+                tagged_plan(tag), tagged_table(tag, n), name=tag,
+                tenant="inter", lane="interactive")))
+        server.drain(600)
+        report = ctx.cost_model.admission_report()
+    lats = [h.latency_s for _, h in probes]
+    keys = {tag: result_fingerprint(h.result())
+            for tag, h in floods + probes}
+    return lats, keys, report
+
+
+def run(delay_s: float = 0.02, floods: int = 6, probes: int = 6,
+        flood_rows: int = 32, probe_rows: int = 8):
+    flood_specs = [(f"fl{i}", flood_rows) for i in range(floods)]
+    probe_specs = [(f"pr{i}", probe_rows) for i in range(probes)]
+    # a probe lands every ~half flood-query so several arrive mid-flood
+    solo_flood_s = flood_rows * 2 * delay_s / CONCURRENCY
+    probe_gap_s = solo_flood_s / 2
+
+    # solo reference: every query on its own fresh context
+    solo = {}
+    for tag, n in flood_specs + probe_specs:
+        ctx = _ctx(delay_s)
+        try:
+            solo[tag] = result_fingerprint(
+                ex.execute(tagged_plan(tag), tagged_table(tag, n), ctx))
+        finally:
+            ctx.close()
+
+    rows, p99 = [], {}
+    for mode in ("no-qos", "qos"):
+        lats, keys, report = _serve(mode, delay_s, flood_specs,
+                                    probe_specs, probe_gap_s)
+        if keys != solo:
+            raise AssertionError(
+                f"{mode} serving changed a query's answer vs solo")
+        p99[mode] = float(np.percentile(lats, 99))
+        rows.append({
+            "mode": mode, "floods": floods, "probes": probes,
+            "probe_p50_s": round(float(np.percentile(lats, 50)), 4),
+            "probe_p99_s": round(p99[mode], 4),
+            "probe_max_s": round(max(lats), 4),
+            "admission_observations": report["observations"],
+            "admission_qerr_ewma": round(report["qerr_ewma"], 3),
+        })
+
+    improvement = p99["no-qos"] / max(p99["qos"], 1e-9)
+    qos_row = next(r for r in rows if r["mode"] == "qos")
+    summary = {
+        "mode": "summary", "floods": floods, "probes": probes,
+        "interactive_p99_noqos_s": round(p99["no-qos"], 4),
+        "interactive_p99_qos_s": round(p99["qos"], 4),
+        "qos_p99_improvement_x": round(improvement, 2),
+        "batch_identical_to_solo": True,
+        "admission_observations": qos_row["admission_observations"],
+        "admission_qerr_ewma": qos_row["admission_qerr_ewma"],
+    }
+    rows.append(summary)
+    common.emit("BENCH_qos", rows)
+    with open(ROOT_SUMMARY, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(common.fmt_table(
+        [r for r in rows if r["mode"] != "summary"],
+        ["mode", "floods", "probes", "probe_p50_s", "probe_p99_s",
+         "probe_max_s"]))
+    print(f"[bench_qos] interactive p99 under batch flood: "
+          f"{p99['no-qos']:.3f}s (no QoS) -> {p99['qos']:.3f}s "
+          f"(admission control): {improvement:.1f}x better tail, "
+          f"batch results byte-identical to solo; admission gate "
+          f"q-error ewma {qos_row['admission_qerr_ewma']} over "
+          f"{qos_row['admission_observations']} queries")
+    if improvement < 3.0:
+        raise AssertionError(
+            f"QoS interactive p99 improvement {improvement:.2f}x < 3x "
+            f"target")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

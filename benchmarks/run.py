@@ -15,7 +15,7 @@ import traceback
 from benchmarks import common
 from benchmarks.common import ROOT, TRAJECTORY, write_trajectory
 from benchmarks import (appendix_d_search, bench_cascade, bench_coalesce,
-                        bench_fault, bench_serve, bench_shard,
+                        bench_fault, bench_qos, bench_serve, bench_shard,
                         fig9_fig10_breakdown,
                         fig13_cardinality, fig14_batch_prompting,
                         roofline_report, table2_capability,
@@ -30,6 +30,9 @@ BENCHES = [
         max_rows=48 if q else 96)),
     ("bench_serve", lambda q: bench_serve.run(
         sleep_s=0.03 if q else 0.05)),
+    ("bench_qos", lambda q: bench_qos.run(
+        delay_s=0.015 if q else 0.02, floods=4 if q else 6,
+        probes=4 if q else 6)),
     ("bench_cascade", lambda q: bench_cascade.run(
         n_rows=128 if q else 256)),
     ("bench_fault", lambda q: bench_fault.run(

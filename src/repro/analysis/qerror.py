@@ -55,6 +55,9 @@ def to_json(model, indent: int = 2) -> str:
         "latency_weight": model.latency_weight,
         "ewma_alpha": model.ewma_alpha,
     }
+    adm = model.admission_report()
+    if adm["observations"] > 0:
+        doc["admission"] = adm
     return json.dumps(doc, indent=indent, sort_keys=True)
 
 
@@ -80,4 +83,13 @@ def render_text(model) -> str:
     med_prior = median_qerror(rows, "prior_qerror")
     lines.append(f"median q-error {med:.3f} (uncalibrated prior would be "
                  f"{med_prior:.3f})")
+    # admission-gate accuracy: whole-plan makespan predictions the
+    # QueryServer's controller fed back via observe_makespan
+    adm = model.admission_report()
+    if adm["observations"] > 0:
+        lines.append(
+            f"admission makespan: {adm['observations']} observations, "
+            f"q-error ewma {adm['qerr_ewma']:.3f} "
+            f"last {adm['qerr_last']:.3f} max {adm['qerr_max']:.3f} "
+            f"(correction ratio {adm['ratio']:.4f})")
     return "\n".join(lines)

@@ -168,6 +168,19 @@ class _CalEntry:
     qerr_max: float = 0.0
 
 
+@dataclasses.dataclass
+class _AdmissionCal:
+    """Whole-plan makespan calibration for the admission controller:
+    an EWMA correction ratio (measured / raw-replay makespan) applied to
+    future :meth:`CostModel.admission_estimate` calls, plus the q-error
+    trajectory of the *corrected* predictions against measurements."""
+    n: int = 0
+    ratio: float = 1.0           # EWMA of measured / raw-replay makespan
+    qerr_ewma: float = 0.0       # q-error of corrected pred vs measured
+    qerr_last: float = 0.0
+    qerr_max: float = 0.0
+
+
 # ---------------------------------------------------------------------------
 # The model
 # ---------------------------------------------------------------------------
@@ -201,6 +214,12 @@ class CostModel:
         self.usd_per_second = float(usd_per_second)
         self.ewma_alpha = float(ewma_alpha)
         self._cal: Dict[Tuple[str, str], _CalEntry] = {}
+        # whole-plan makespan calibration for admission control — kept
+        # OUT of the per-(op, tier) state and out of calibration_state():
+        # admission feedback only exists on serving paths, and the
+        # invariance suites byte-compare calibration_state between served
+        # and solo runs
+        self._adm = _AdmissionCal()
         # meter -> consumed call_log length; weak keys so a long-lived
         # model does not pin every per-query meter it ever observed
         self._cursors = weakref.WeakKeyDictionary()
@@ -397,10 +416,7 @@ class CostModel:
         sched = rt.EventScheduler(
             concurrency=max(1, int(concurrency)) * max(1, int(shards)),
             per_tier=per_tier, mode=mode)
-        for tname, busy in (occupancy or {}).items():
-            for b in busy:
-                if b > 0:
-                    sched.submit(tname, float(b), 0.0)
+        sched.seed_occupancy(occupancy)
         ready = 0.0
         for op, c in zip(plan.ops, per_op):
             if not op.is_llm:
@@ -440,10 +456,7 @@ class CostModel:
         sched = rt.EventScheduler(
             concurrency=max(1, int(concurrency)) * max(1, int(shards)),
             per_tier=per_tier)
-        for tname, busy in (occupancy or {}).items():
-            for b in busy:
-                if b > 0:
-                    sched.submit(tname, float(b), 0.0)
+        sched.seed_occupancy(occupancy)
         calls = int(round(c.llm_calls))
         if calls <= 0:
             return sched.makespan
@@ -455,6 +468,64 @@ class CostModel:
             for _ in range(calls):
                 sched.submit(tier_name, per_call, 0.0)
         return sched.makespan
+
+    # -- admission control (QueryServer digital twin) --------------------
+    def admission_estimate(self, plan: plan_ir.LogicalPlan, n_rows: int, *,
+                           occupancy: Optional[Dict[str, List[float]]] = None,
+                           default_tier: str = "m*",
+                           concurrency: int = 16, batch_size: int = 1,
+                           shards: int = 1,
+                           avg_value_tokens: float = 60.0) -> float:
+        """Predicted makespan (seconds) of running ``plan`` over
+        ``n_rows`` rows under the *current* serving load — the admission
+        controller's gate. The candidate's calls are replayed onto an
+        ``EventScheduler`` seeded with ``occupancy`` (the live
+        ``Dispatcher.occupancy()`` snapshot: the simulated driver as a
+        free digital twin of the fleet), then scaled by the EWMA
+        correction ratio :meth:`observe_makespan` has learned from
+        predicted-vs-actual feedback. Per-call latencies inside the
+        replay already use the per-(op, tier) calibrated EWMAs, so both
+        calibration loops compound."""
+        pc = self.plan_cost(plan, n_rows, default_tier=default_tier,
+                            avg_value_tokens=avg_value_tokens,
+                            concurrency=concurrency, batch_size=batch_size,
+                            shards=shards, occupancy=occupancy or {},
+                            makespan=True)
+        with self._lock:
+            ratio = self._adm.ratio if self._adm.n > 0 else 1.0
+        return pc.makespan_s * ratio
+
+    def observe_makespan(self, predicted_s: float, measured_s: float
+                         ) -> None:
+        """Fold one completed query's predicted-vs-actual makespan into
+        the admission calibration: the q-error of the prediction we
+        *made* (post-correction) and an EWMA update of the correction
+        ratio. With corrected = raw * r and k = measured / corrected, the
+        ideal ratio is measured / raw = k * r — so the update needs only
+        the corrected prediction, not the raw replay value."""
+        pred = max(float(predicted_s), 1e-12)
+        meas = max(float(measured_s), 1e-12)
+        q = _qerror(pred, meas)
+        a = self.ewma_alpha
+        with self._lock:
+            e = self._adm
+            e.qerr_last = q
+            e.qerr_max = max(e.qerr_max, q)
+            e.qerr_ewma = q if e.n == 0 else a * q + (1.0 - a) * e.qerr_ewma
+            ideal = (meas / pred) * e.ratio
+            e.ratio = ideal if e.n == 0 else a * ideal + (1.0 - a) * e.ratio
+            e.n += 1
+
+    def admission_report(self) -> dict:
+        """Admission-estimate accuracy snapshot (``--explain-cost``):
+        how many makespan predictions have been checked against
+        measurements, the learned correction ratio, and the q-error
+        trajectory of the corrected predictions."""
+        with self._lock:
+            e = self._adm
+            return {"observations": e.n, "ratio": e.ratio,
+                    "qerr_ewma": e.qerr_ewma, "qerr_last": e.qerr_last,
+                    "qerr_max": e.qerr_max, "ewma_alpha": self.ewma_alpha}
 
     # -- online calibration ----------------------------------------------
     def observe(self, meter) -> int:
@@ -568,6 +639,7 @@ class CostModel:
     def reset_calibration(self) -> None:
         with self._lock:
             self._cal.clear()
+            self._adm = _AdmissionCal()
             self._cursors = weakref.WeakKeyDictionary()
 
 

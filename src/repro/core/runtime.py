@@ -193,6 +193,18 @@ class EventScheduler:
             self._floor = self._makespan
             return self._floor
 
+    def seed_occupancy(self, occupancy: Optional[Dict[str, List[float]]]
+                       ) -> None:
+        """Pre-load per-tier busy-until offsets (``Dispatcher.occupancy()``
+        shape: tier -> remaining-busy seconds per occupied worker slot) as
+        zero-ready jobs, so later submissions see the pools exactly as the
+        live dispatcher does — the digital-twin seed every ``CostModel``
+        makespan replay and ``QueryServer`` admission estimate uses."""
+        for tname, busy in (occupancy or {}).items():
+            for b in busy:
+                if b > 0:
+                    self.submit(tname, float(b), 0.0)
+
     def drain(self, meter: bk.UsageMeter, cursor: int,
               ready_s: float = 0.0) -> Tuple[int, float]:
         """Submit every call the meter logged since ``cursor``; returns

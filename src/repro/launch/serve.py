@@ -49,6 +49,13 @@ Execution knobs (one line each; all apply to ``--semantic`` modes):
 * ``--serve N`` — admit N workload queries onto one shared QueryServer
   (0 = off); ``--stagger S`` Poisson-ish mean inter-admission gap in
   seconds (seeded, explicit offsets; 0 = admit all at once).
+* ``--tenants N`` / ``--lane {batch,interactive,mixed}`` /
+  ``--admission SPEC`` / ``--slo S`` — multi-tenant QoS on the serve
+  path: round-robin the served queries across N tenants, pick their
+  priority lane (``mixed`` alternates), wire an
+  ``query_server.AdmissionController`` (SPEC ``rows=R,depth=D,conc=C``;
+  bare ``on`` for defaults), and attach an SLO deadline so the
+  makespan gate denies queries predicted to bust it.
 """
 from __future__ import annotations
 
@@ -196,41 +203,78 @@ def stagger_offsets(n: int, mean_s: float, seed: int = 0):
     return offsets
 
 
+def parse_admission(spec: str):
+    """``--admission`` spec -> :class:`AdmissionController` (or None).
+    ``""`` = off; ``on`` = all-default controller; otherwise a
+    comma-separated ``rows=R,depth=D,conc=C`` picks the per-tenant
+    in-flight-row cap, per-tenant queue depth, and execution width."""
+    from repro.launch.query_server import AdmissionController
+    spec = (spec or "").strip()
+    if not spec:
+        return None
+    kw = {}
+    if spec not in ("on", "1", "true"):
+        keys = {"rows": "max_tenant_rows", "depth": "max_queue_depth",
+                "conc": "max_concurrent"}
+        for part in spec.split(","):
+            k, _, v = part.partition("=")
+            if k.strip() not in keys:
+                raise ValueError(f"bad --admission entry {part!r}; "
+                                 f"expected rows=/depth=/conc= or 'on'")
+            kw[keys[k.strip()]] = int(v)
+    return AdmissionController(**kw)
+
+
 def serve_queries(args, table, cfg, engine, ctx):
     """Streaming semantic serve: admit ``--serve N`` workload queries
     (staggered by ``--stagger``) onto one shared QueryServer and report
-    per-query latency percentiles + makespan vs sequential estimate."""
+    per-query latency percentiles + makespan vs sequential estimate.
+    With ``--admission`` the queries route through the multi-tenant
+    admission controller (``--tenants/--lane/--slo`` shape the load)."""
     from repro.data import WORKLOADS
     from repro.launch.query_server import QueryServer
 
     queries = [WORKLOADS[args.semantic][i % len(WORKLOADS[args.semantic])]
                for i in range(args.serve)]
     offsets = stagger_offsets(len(queries), args.stagger, seed=args.seed)
+    controller = parse_admission(args.admission)
     print(f"[serve] streaming {len(queries)} queries over {table.name} "
           f"({table.n_rows} rows), m1 = {cfg.name} on {args.slots} slots, "
           f"driver={args.driver} shards={args.shards} procs={args.procs} "
-          f"batch={args.batch} stagger={args.stagger}s")
+          f"batch={args.batch} stagger={args.stagger}s "
+          f"tenants={args.tenants} lane={args.lane} "
+          f"admission={'on' if controller else 'off'} slo={args.slo}")
     handles = []
-    with QueryServer(ctx) as server:
+    with QueryServer(ctx, admission=controller) as server:
         t0 = time.perf_counter()
-        for q, off in zip(queries, offsets):
+        for i, (q, off) in enumerate(zip(queries, offsets)):
             lead = off - (time.perf_counter() - t0)
             if lead > 0:
                 time.sleep(lead)
-            handles.append(server.submit(q.plan_for(table), table,
-                                         name=q.qid))
+            lane = args.lane if args.lane in ("batch", "interactive") \
+                else ("interactive" if i % 2 == 0 else "batch")
+            handles.append(server.submit(
+                q.plan_for(table), table, name=q.qid,
+                tenant=f"t{i % max(1, args.tenants)}", lane=lane,
+                deadline_s=args.slo))
         server.drain()
         makespan = time.perf_counter() - t0
         stats = server.stats()
-    lats = sorted(h.latency_s for h in handles)
+    served = [h for h in handles if not h.rejected()]
+    lats = sorted(h.latency_s for h in served) or [0.0]
     # per-query exec walls are measured UNDER co-tenant contention, so
     # their sum is only an upper bound on back-to-back execution — a
     # measured sequential baseline lives in benchmarks/bench_serve.py
-    seq_bound = sum(h.exec_wall_s for h in handles)
+    seq_bound = sum(h.exec_wall_s for h in served)
     for h in handles:
-        res = "FAILED" if h.failed() else \
-            repr(h.result().value())[:60]
-        print(f"  [{h.name}] latency={h.latency_s:.2f}s "
+        if h.rejected():
+            res = f"REJECTED ({h._fut.exception().reason})"
+        elif h.failed():
+            res = "FAILED"
+        else:
+            res = repr(h.result().value())[:60]
+        print(f"  [{h.name}] tenant={h.tenant} lane={h.lane} "
+              f"latency={h.latency_s:.2f}s "
               f"exec={h.exec_wall_s:.2f}s calls={h.meter.total.calls} "
               f"-> {res}")
     p = np.percentile
@@ -308,6 +352,26 @@ def build_parser() -> argparse.ArgumentParser:
                     help="--serve: Poisson-ish mean inter-admission gap "
                          "in seconds (seeded explicit offsets; 0 = admit "
                          "all queries at once)")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="--serve: round-robin the served queries across "
+                         "N tenant ids (t0..tN-1) for the admission "
+                         "controller's per-tenant caps")
+    ap.add_argument("--lane", choices=("batch", "interactive", "mixed"),
+                    default="batch",
+                    help="--serve: priority lane for served queries; "
+                         "'mixed' alternates interactive/batch so lane "
+                         "preemption is visible in one run")
+    ap.add_argument("--admission", default="",
+                    help="--serve: enable the multi-tenant admission "
+                         "controller — 'on' for defaults, or "
+                         "'rows=R,depth=D,conc=C' (per-tenant in-flight "
+                         "row cap, per-tenant queue depth, execution "
+                         "width); empty = legacy FIFO admission")
+    ap.add_argument("--slo", type=float, default=None,
+                    help="--serve: per-query deadline in seconds; with "
+                         "--admission, queries whose predicted makespan "
+                         "under current load busts it are denied at "
+                         "admission (AdmissionError) instead of running")
     ap.add_argument("--latency-weight", type=float, default=0.0,
                     help="--semantic: cost x makespan weight on the "
                          "context's CostModel — 0 (default) optimizes "

@@ -146,7 +146,9 @@ def test_driver_per_tier_cap_bounds_threaded_concurrency(movie_small):
 
     wide = run(None)
     narrow = run({"m*": 1})
-    assert wide.wall_s < 0.3                     # 8 calls on 8 workers
+    # 8 calls on 8 workers: ideal 0.05s; bound scales with the serialized
+    # run so a loaded CI box inflating both doesn't flake the comparison
+    assert wide.wall_s < max(0.3, 0.5 * narrow.wall_s)
     assert narrow.wall_s > 8 * 0.05 * 0.8        # 8 calls on 1 worker
 
 

@@ -528,7 +528,9 @@ def test_server_drain_respects_shared_deadline_fault():
         t0 = time.perf_counter()
         with pytest.raises(TimeoutError):
             server.drain(timeout=0.15)
-        assert time.perf_counter() - t0 < 1.0
+        # full completion of the in-flight queries would take several
+        # seconds; anything under 1.5s proves drain honored the deadline
+        assert time.perf_counter() - t0 < 1.5
         for h in handles:
             h.result(timeout=30)
     finally:

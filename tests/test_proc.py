@@ -20,6 +20,8 @@ from repro.distributed.morsel_shards import ShardedDispatcher, _compose
 from repro.distributed.process_workers import (ProcessShardDispatcher,
                                                shippable_backends)
 
+pytestmark = pytest.mark.proc
+
 MORSEL = 8
 
 

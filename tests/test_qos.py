@@ -1,0 +1,489 @@
+"""Multi-tenant QoS: AdmissionController caps, lanes, and the
+makespan-gated deadline check on the QueryServer.
+
+Determinism strategy: ordering assertions never race real time — a
+:class:`GateBackend` blocks every backend call on an explicit event, so
+the test controls exactly when a running query can finish and what is
+queued behind it when it does. Deadline-gate tests run on the simulated
+driver with an empty server, where ``admission_estimate`` is a pure
+function of (plan, rows, occupancy snapshot) and denial decisions are
+bit-reproducible across fresh servers.
+"""
+import threading
+
+import pytest
+
+import repro.core.runtime as rt
+from repro.analysis import qerror
+from repro.core import plan as plan_ir
+from repro.core.cost_model import CostModel
+from repro.launch.query_server import (AdmissionController, AdmissionError,
+                                       QueryServer)
+from repro.launch.serve import parse_admission
+from repro.testing import (KindOracle, SleepBackend, result_fingerprint,
+                           tagged_plan, tagged_table)
+
+pytestmark = pytest.mark.qos
+
+DELAY = 0.004
+
+
+class GateBackend:
+    """SleepBackend wrapper whose calls block until :meth:`open` — lets a
+    test pin a query in the 'running' state for as long as it needs."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.tier = inner.tier
+        self._gate = threading.Event()
+
+    def open(self):
+        self._gate.set()
+
+    def run_values(self, op, values, meter=None, batch_size=1):
+        assert self._gate.wait(30.0), "gate never opened"
+        return self.inner.run_values(op, values, meter=meter,
+                                     batch_size=batch_size)
+
+
+def _backends(delay_s=DELAY, gated=False):
+    be = SleepBackend(KindOracle(), delay_s=delay_s)
+    if gated:
+        be = GateBackend(be)
+    return {"m*": be}, be
+
+
+def _ctx(backends, **kw):
+    kw.setdefault("default_tier", "m*")
+    kw.setdefault("driver", "threads")
+    kw.setdefault("concurrency", 4)
+    kw.setdefault("morsel_size", 64)
+    return rt.ExecutionContext(backends=backends, **kw)
+
+
+def _wait(pred, timeout_s=10.0):
+    """Poll a condition instead of sleeping a guessed wall time."""
+    import time
+    deadline = time.perf_counter() + timeout_s
+    while time.perf_counter() < deadline:
+        if pred():
+            return True
+        time.sleep(0.002)
+    return False
+
+
+# -- baseline / stats shape ----------------------------------------------
+
+def test_legacy_server_has_no_qos_key():
+    backends, _ = _backends()
+    with QueryServer(_ctx(backends)) as srv:
+        h = srv.submit(tagged_plan("legacy"), tagged_table("legacy", 8))
+        assert h.result(10).is_reduce is False
+        stats = srv.stats()
+    assert "qos" not in stats
+    assert h.state == "completed"
+
+
+def test_qos_stats_shape():
+    backends, _ = _backends()
+    ctl = AdmissionController(max_tenant_rows=64, max_queue_depth=4,
+                              max_concurrent=2)
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        srv.submit(tagged_plan("shape"), tagged_table("shape", 8),
+                   tenant="t0", lane="interactive").result(10)
+        qos = srv.stats()["qos"]
+    assert qos["served_by_lane"] == {"interactive": 1, "batch": 0}
+    assert qos["rejected_backpressure"] == 0
+    assert qos["rejected_deadline"] == 0
+    assert qos["max_tenant_rows"] == 64
+    assert qos["running"] == 0 and qos["queued"] == {"interactive": 0,
+                                                     "batch": 0}
+
+
+def test_controller_binds_once():
+    backends, _ = _backends()
+    ctl = AdmissionController()
+    with QueryServer(_ctx(backends), admission=ctl):
+        with pytest.raises(RuntimeError, match="already bound"):
+            QueryServer(_ctx(backends), admission=ctl)
+
+
+def test_unknown_lane_rejected_eagerly():
+    backends, _ = _backends()
+    with QueryServer(_ctx(backends)) as srv:
+        with pytest.raises(ValueError, match="unknown lane"):
+            srv.submit(tagged_plan("x"), tagged_table("x", 4),
+                       lane="sidechannel")
+    with pytest.raises(ValueError, match="unknown lane"):
+        AdmissionController(default_lane="express")
+
+
+# -- tenant caps ---------------------------------------------------------
+
+def test_tenant_row_cap_queues_second_query():
+    backends, gate = _backends(gated=True)
+    ctl = AdmissionController(max_tenant_rows=10, max_concurrent=4)
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        a = srv.submit(tagged_plan("a"), tagged_table("a", 8), tenant="t")
+        assert _wait(lambda: a.state == "running")
+        b = srv.submit(tagged_plan("b"), tagged_table("b", 8), tenant="t")
+        # 8 + 8 > 10: b must wait for a even though a slot is free
+        assert b.state == "queued"
+        gate.open()
+        srv.drain(30)
+    assert a.state == "completed" and b.state == "completed"
+    assert b.started_s >= a.finished_s
+
+
+def test_oversized_query_admitted_when_tenant_idle():
+    backends, _ = _backends()
+    ctl = AdmissionController(max_tenant_rows=4)
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        h = srv.submit(tagged_plan("big"), tagged_table("big", 32),
+                       tenant="t")
+        assert h.result(10) is not None
+    assert h.state == "completed"
+
+
+def test_tenant_cap_does_not_block_other_tenant():
+    backends, gate = _backends(gated=True)
+    ctl = AdmissionController(max_tenant_rows=10, max_concurrent=4)
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        a = srv.submit(tagged_plan("a"), tagged_table("a", 8), tenant="t")
+        assert _wait(lambda: a.state == "running")
+        b = srv.submit(tagged_plan("b"), tagged_table("b", 8), tenant="t")
+        c = srv.submit(tagged_plan("c"), tagged_table("c", 8), tenant="u")
+        # t is capped, u is not: c starts (blocked head yields the slot)
+        assert _wait(lambda: c.state == "running")
+        assert b.state == "queued"
+        gate.open()
+        srv.drain(30)
+    assert {a.state, b.state, c.state} == {"completed"}
+
+
+def test_queue_depth_backpressure_sheds_newest():
+    backends, gate = _backends(gated=True)
+    ctl = AdmissionController(max_concurrent=1, max_queue_depth=1)
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        a = srv.submit(tagged_plan("a"), tagged_table("a", 4), tenant="t")
+        assert _wait(lambda: a.state == "running")
+        b = srv.submit(tagged_plan("b"), tagged_table("b", 4), tenant="t")
+        c = srv.submit(tagged_plan("c"), tagged_table("c", 4), tenant="t")
+        assert b.state == "queued"          # FIFO is sacred:
+        assert c.rejected()                 # the NEW arrival is shed
+        with pytest.raises(AdmissionError) as ei:
+            c.result(1)
+        assert ei.value.reason == "backpressure"
+        gate.open()
+        srv.drain(30)
+        assert srv.stats()["qos"]["rejected_backpressure"] == 1
+    assert a.state == "completed" and b.state == "completed"
+
+
+def test_queue_depth_is_per_tenant():
+    backends, gate = _backends(gated=True)
+    ctl = AdmissionController(max_concurrent=1, max_queue_depth=1)
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        a = srv.submit(tagged_plan("a"), tagged_table("a", 4), tenant="t")
+        assert _wait(lambda: a.state == "running")
+        srv.submit(tagged_plan("b"), tagged_table("b", 4), tenant="t")
+        d = srv.submit(tagged_plan("d"), tagged_table("d", 4), tenant="u")
+        # u's allowance is separate from t's spent one
+        assert d.state == "queued" and not d.rejected()
+        gate.open()
+        srv.drain(30)
+    assert d.state == "completed"
+
+
+# -- priority lanes ------------------------------------------------------
+
+def test_interactive_preempts_batch_at_dequeue():
+    backends, gate = _backends(gated=True)
+    ctl = AdmissionController(max_concurrent=1)
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        a = srv.submit(tagged_plan("a"), tagged_table("a", 4), lane="batch")
+        assert _wait(lambda: a.state == "running")
+        b2 = srv.submit(tagged_plan("b2"), tagged_table("b2", 4),
+                        lane="batch")
+        i1 = srv.submit(tagged_plan("i1"), tagged_table("i1", 4),
+                        lane="interactive")
+        assert b2.state == "queued" and i1.state == "queued"
+        gate.open()
+        srv.drain(30)
+    # i1 was submitted after b2 but starts first (lane preemption) —
+    # and only once a finished (no mid-query preemption)
+    assert i1.started_s >= a.finished_s
+    assert b2.started_s >= i1.finished_s
+
+
+def test_fifo_within_lane():
+    backends, gate = _backends(gated=True)
+    ctl = AdmissionController(max_concurrent=1)
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        first = srv.submit(tagged_plan("q0"), tagged_table("q0", 4))
+        assert _wait(lambda: first.state == "running")
+        rest = [srv.submit(tagged_plan(f"q{i}"), tagged_table(f"q{i}", 4))
+                for i in range(1, 5)]
+        gate.open()
+        srv.drain(30)
+    starts = [h.started_s for h in [first] + rest]
+    assert starts == sorted(starts)
+
+
+def test_no_mid_morsel_preemption():
+    backends, gate = _backends(gated=True)
+    ctl = AdmissionController(max_concurrent=1)
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        batch = srv.submit(tagged_plan("bg"), tagged_table("bg", 4),
+                           lane="batch")
+        assert _wait(lambda: batch.state == "running")
+        inter = srv.submit(tagged_plan("fg"), tagged_table("fg", 4),
+                           lane="interactive")
+        # the running batch query is never interrupted: interactive
+        # priority acts at dequeue time only
+        assert inter.state == "queued"
+        gate.open()
+        srv.drain(30)
+    assert inter.started_s >= batch.finished_s
+
+
+# -- makespan gate -------------------------------------------------------
+
+def _sim_ctx(**kw):
+    backends, _ = _backends()
+    kw.setdefault("driver", "simulated")
+    kw.setdefault("cost_model", CostModel())
+    return _ctx(backends, **kw)
+
+
+def test_deadline_denial_is_deterministic():
+    preds = []
+    for _ in range(3):
+        ctl = AdmissionController()
+        with QueryServer(_sim_ctx(), admission=ctl) as srv:
+            h = srv.submit(tagged_plan("dl"), tagged_table("dl", 256),
+                           deadline_s=1e-9)
+            assert h.rejected()
+            with pytest.raises(AdmissionError) as ei:
+                h.result(1)
+            assert ei.value.reason == "deadline"
+            preds.append(h.predicted_completion_s)
+            assert srv.stats()["qos"]["rejected_deadline"] == 1
+    # same plan, same empty server -> bit-identical prediction + decision
+    assert preds[0] == preds[1] == preds[2]
+
+
+def test_generous_deadline_admitted():
+    ctl = AdmissionController()
+    with QueryServer(_sim_ctx(), admission=ctl) as srv:
+        h = srv.submit(tagged_plan("ok"), tagged_table("ok", 16),
+                       deadline_s=3600.0)
+        assert not h.rejected()
+        h.result(10)
+    assert h.state == "completed"
+    assert h.predicted_makespan_s is not None
+    assert h.predicted_completion_s == h.predicted_makespan_s  # empty queue
+
+
+def test_deadline_ignored_without_cost_model():
+    backends, _ = _backends()
+    ctl = AdmissionController()
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        h = srv.submit(tagged_plan("nm"), tagged_table("nm", 8),
+                       deadline_s=1e-9)
+        assert not h.rejected()
+        h.result(10)
+    assert h.predicted_makespan_s is None
+
+
+def test_predicted_completion_includes_queue_wait():
+    backends, gate = _backends(gated=True)
+    ctl = AdmissionController(max_concurrent=1)
+    ctx = _ctx(backends, cost_model=CostModel())
+    with QueryServer(ctx, admission=ctl) as srv:
+        a = srv.submit(tagged_plan("a"), tagged_table("a", 16))
+        assert _wait(lambda: a.state == "running")
+        b = srv.submit(tagged_plan("b"), tagged_table("b", 16))
+        c = srv.submit(tagged_plan("c"), tagged_table("c", 16))
+        assert b.state == "queued"
+        # c's completion estimate carries b's queued makespan as wait
+        assert c.predicted_completion_s > c.predicted_makespan_s
+        gate.open()
+        srv.drain(30)
+
+
+def test_admission_estimate_grows_with_occupancy():
+    model = CostModel()
+    plan = tagged_plan("occ")
+    idle = model.admission_estimate(plan, 32)
+    busy = model.admission_estimate(plan, 32,
+                                    occupancy={"m*": [5.0, 5.0, 5.0, 5.0]})
+    assert busy > idle
+
+
+def test_seed_occupancy_shifts_event_clock():
+    sched = rt.EventScheduler(concurrency=2)
+    sched.seed_occupancy({"m*": [1.0, 2.0]})
+    sched.submit("m*", 0.5, 0.0)
+    sched.barrier()
+    # both seeded slots busy; the new job waits for the earlier one
+    assert sched.makespan == pytest.approx(2.0)
+
+
+# -- calibration feedback ------------------------------------------------
+
+def test_observe_makespan_feedback_recorded():
+    ctl = AdmissionController()
+    ctx = _sim_ctx()
+    with QueryServer(ctx, admission=ctl) as srv:
+        for i in range(3):
+            srv.submit(tagged_plan(f"f{i}"), tagged_table(f"f{i}", 16)
+                       ).result(10)
+    rep = ctx.cost_model.admission_report()
+    assert rep["observations"] == 3
+    assert rep["qerr_last"] >= 1.0 and rep["qerr_max"] >= rep["qerr_last"]
+
+
+def test_observe_makespan_converges():
+    # stationary workload: raw replay says 1.0s, reality says 2.5s.
+    # the corrected prediction (raw * ratio) must converge on reality.
+    model = CostModel()
+    qerrs = []
+    for _ in range(8):
+        pred = 1.0 * model.admission_report()["ratio"]
+        model.observe_makespan(pred, 2.5)
+        qerrs.append(model.admission_report()["qerr_last"])
+    assert qerrs[0] == pytest.approx(2.5)
+    assert qerrs[-1] == pytest.approx(1.0, abs=0.05)
+    assert model.admission_report()["ratio"] == pytest.approx(2.5, rel=0.1)
+
+
+def test_observe_makespan_keeps_calibration_state():
+    # the whole-plan admission EWMA must stay OUT of the per-(op, tier)
+    # calibration state the invariance suites byte-compare
+    model = CostModel()
+    before = model.calibration_state()
+    model.observe_makespan(1.0, 7.0)
+    assert model.calibration_state() == before
+    model.reset_calibration()
+    assert model.admission_report()["observations"] == 0
+
+
+def test_explain_cost_reports_admission_accuracy():
+    ctx = _sim_ctx()
+    ctl = AdmissionController()
+    with QueryServer(ctx, admission=ctl) as srv:
+        srv.submit(tagged_plan("xc"), tagged_table("xc", 16)).result(10)
+    text = qerror.render_text(ctx.cost_model)
+    assert "admission makespan: 1 observations" in text
+    import json
+    doc = json.loads(qerror.to_json(ctx.cost_model))
+    assert doc["admission"]["observations"] == 1
+    # and absent before any feedback
+    assert "admission" not in json.loads(qerror.to_json(CostModel()))
+
+
+# -- solo identity under admission ---------------------------------------
+
+def _solo(plan, table, **ctx_kw):
+    from repro.core import executor as ex
+    backends, _ = _backends()
+    ctx = _ctx(backends, **ctx_kw)
+    try:
+        return ex.execute(plan, table, ctx)
+    finally:
+        ctx.close()
+
+
+def _meter_key(meter):
+    return {t: (u.calls, round(u.tok_in, 6), round(u.tok_out, 6),
+                round(u.usd, 9), round(u.latency_s, 6))
+            for t, u in sorted(meter.by_tier.items())}
+
+
+@pytest.mark.parametrize("driver", ["simulated", "threads"])
+@pytest.mark.parametrize("shards", [1, 2])
+def test_admitted_queries_identical_to_solo(driver, shards):
+    backends, _ = _backends()
+    ctl = AdmissionController(max_tenant_rows=24, max_queue_depth=8,
+                              max_concurrent=2)
+    specs = [(f"s{i}", "t0" if i % 2 else "t1",
+              "interactive" if i % 3 == 0 else "batch", i % 2 == 0)
+             for i in range(6)]
+    ctx = _ctx(backends, driver=driver, shards=shards, morsel_size=8,
+               cost_model=CostModel())
+    with QueryServer(ctx, admission=ctl) as srv:
+        handles = [srv.submit(tagged_plan(tag, reduce_tail=red),
+                              tagged_table(tag, 16), tenant=ten, lane=lane)
+                   for tag, ten, lane, red in specs]
+        srv.drain(60)
+    for h, (tag, _, _, red) in zip(handles, specs):
+        solo = _solo(tagged_plan(tag, reduce_tail=red),
+                     tagged_table(tag, 16), driver=driver, shards=shards,
+                     morsel_size=8)
+        assert result_fingerprint(h.result()) == result_fingerprint(solo)
+        assert _meter_key(h.meter) == _meter_key(solo.meter)
+
+
+# -- lifecycle under load ------------------------------------------------
+
+def test_drain_waits_for_queued_queries():
+    backends, _ = _backends()
+    ctl = AdmissionController(max_concurrent=1)
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        hs = [srv.submit(tagged_plan(f"d{i}"), tagged_table(f"d{i}", 8))
+              for i in range(5)]
+        srv.drain(60)
+        assert all(h.state == "completed" for h in hs)
+
+
+def test_close_completes_queued_queries():
+    backends, _ = _backends()
+    ctl = AdmissionController(max_concurrent=1)
+    srv = QueryServer(_ctx(backends), admission=ctl)
+    hs = [srv.submit(tagged_plan(f"c{i}"), tagged_table(f"c{i}", 8))
+          for i in range(4)]
+    srv.close()
+    assert all(h.state == "completed" for h in hs)
+
+
+def test_failure_releases_capacity():
+    class SelectiveBoomOracle:
+        """KindOracle that explodes on values carrying the 'bad' tag —
+        one query fails, co-tenant queries are untouched."""
+
+        def answer(self, op, value):
+            if "bad" in str(value):
+                raise RuntimeError("boom")
+            return True if op.kind == plan_ir.FILTER else f"A:{value}"
+
+        def answer_reduce(self, op, values):
+            return len(list(values))
+
+    backends = {"m*": SleepBackend(SelectiveBoomOracle(), delay_s=DELAY)}
+    ctl = AdmissionController(max_concurrent=1, max_tenant_rows=8)
+    with QueryServer(_ctx(backends), admission=ctl) as srv:
+        h_bad = srv.submit(tagged_plan("bad"), tagged_table("bad", 4),
+                           tenant="t")
+        with pytest.raises(RuntimeError, match="boom"):
+            h_bad.result(10)
+        h_ok = srv.submit(tagged_plan("ok2"), tagged_table("ok2", 4),
+                          tenant="t")
+        assert h_ok.result(10) is not None
+        qos = srv.stats()["qos"]
+    assert h_bad.state == "failed" and h_ok.state == "completed"
+    assert qos["running"] == 0 and qos["tenant_rows"] == {}
+
+
+# -- serve launcher plumbing ---------------------------------------------
+
+def test_parse_admission_specs():
+    assert parse_admission("") is None
+    ctl = parse_admission("on")
+    assert isinstance(ctl, AdmissionController)
+    assert ctl.max_tenant_rows is None
+    ctl = parse_admission("rows=64,depth=4,conc=3")
+    assert (ctl.max_tenant_rows, ctl.max_queue_depth,
+            ctl.max_concurrent) == (64, 4, 3)
+    with pytest.raises(ValueError, match="bad --admission"):
+        parse_admission("turbo=9")

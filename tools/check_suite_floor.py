@@ -1,0 +1,60 @@
+"""Assert the test-suite floor: pytest must report at least FLOOR_PASSED
+passing tests and at most CEIL_SKIPPED skips.
+
+    python -m pytest -q | tee pytest.out
+    python tools/check_suite_floor.py pytest.out
+
+Guards against silent shrinkage: a refactor that deletes or deselects
+tests keeps a green exit code, but the floor check fails the build. The
+floor is the local no-hypothesis count; environments with hypothesis
+installed collect extra property-test front-ends and clear it with room
+to spare. Bump FLOOR_PASSED when a PR adds tests.
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+FLOOR_PASSED = 393
+CEIL_SKIPPED = 1
+
+
+def check(text: str) -> str:
+    """Return an error message, or '' if the floor holds."""
+    # the summary tail looks like: "393 passed, 1 skipped in 312.44s"
+    m_pass = re.search(r"(\d+) passed", text)
+    if not m_pass:
+        return "no 'N passed' summary found in pytest output"
+    passed = int(m_pass.group(1))
+    m_skip = re.search(r"(\d+) skipped", text)
+    skipped = int(m_skip.group(1)) if m_skip else 0
+    m_fail = re.search(r"(\d+) (?:failed|error)", text)
+    if m_fail:
+        return f"{m_fail.group(0)} — suite is red"
+    if passed < FLOOR_PASSED:
+        return (f"{passed} passed < floor {FLOOR_PASSED} — "
+                f"tests were lost or deselected")
+    if skipped > CEIL_SKIPPED:
+        return (f"{skipped} skipped > ceiling {CEIL_SKIPPED} — "
+                f"tests are being silently skipped")
+    return ""
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if argv:
+        with open(argv[0]) as f:
+            text = f.read()
+    else:
+        text = sys.stdin.read()
+    err = check(text)
+    if err:
+        print(f"[suite-floor] FAIL: {err}", file=sys.stderr)
+        return 1
+    print(f"[suite-floor] ok (floor {FLOOR_PASSED} passed / "
+          f"<= {CEIL_SKIPPED} skipped)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
